@@ -1,0 +1,120 @@
+"""§Perf hillclimb harness: rebuild one cell with overrides, re-lower,
+re-analyse, print the three roofline terms + memory fit.
+
+    PYTHONPATH=src python -m benchmarks.hillclimb deepseek-67b train_4k \
+        --accum 1 --set sp_residuals=True --tag iter1
+
+Each invocation is one hypothesis->change->measure cycle; results land
+in experiments/hillclimb/<arch>__<shape>__<tag>.json and the log goes
+into EXPERIMENTS.md §Perf by hand.
+"""
+import os
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=512")
+
+import argparse
+import dataclasses
+import json
+import time
+from pathlib import Path
+
+import jax
+
+OUT = Path(__file__).resolve().parents[1] / "experiments" / "hillclimb"
+
+
+def parse_value(v: str):
+    for cast in (int, float):
+        try:
+            return cast(v)
+        except ValueError:
+            pass
+    if v in ("True", "False", "None"):
+        return {"True": True, "False": False, "None": None}[v]
+    return v
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("arch")
+    ap.add_argument("shape")
+    ap.add_argument("--mesh", default="pod", choices=["pod", "multipod"])
+    ap.add_argument("--accum", type=int, default=None)
+    ap.add_argument("--set", nargs="*", default=[],
+                    help="config field overrides k=v (dataclasses.replace)")
+    ap.add_argument("--rules", nargs="*", default=[],
+                    help="sharding rule overrides k=v (v in dp/tp/None)")
+    ap.add_argument("--opt-rules", nargs="*", default=[],
+                    help="optimizer-state rule overrides (ZeRO-1 style)")
+    ap.add_argument("--tag", default="baseline")
+    args = ap.parse_args(argv)
+
+    from repro.analysis.buffers import bf16_legalization_overhead
+    from repro.analysis.hlo_cost import loop_aware_cost
+    from repro.configs import SHAPES, get_arch
+    from repro.launch.mesh import make_production_mesh
+    from repro.launch.steps import build_cell, lower_cell
+
+    spec = get_arch(args.arch)
+    if args.set:
+        overrides = {k: parse_value(v) for k, v in
+                     (s.split("=", 1) for s in args.set)}
+        spec = dataclasses.replace(
+            spec, config=dataclasses.replace(spec.config, **overrides))
+    if args.rules:
+        rules = dict(spec.rules)
+        rules.update({k: parse_value(v) for k, v in
+                      (s.split("=", 1) for s in args.rules)})
+        spec = dataclasses.replace(spec, rules=rules)
+    if args.opt_rules:
+        opt_rules = dict(spec.opt_rules)
+        opt_rules.update({k: parse_value(v) for k, v in
+                          (s.split("=", 1) for s in args.opt_rules)})
+        spec = dataclasses.replace(spec, opt_rules=opt_rules)
+    if args.accum is not None:
+        ga = dict(spec.grad_accum)
+        ga[args.shape] = args.accum
+        spec = dataclasses.replace(spec, grad_accum=ga)
+
+    shape = SHAPES[args.shape]
+    mesh = make_production_mesh(multi_pod=(args.mesh == "multipod"))
+    t0 = time.time()
+    cell = build_cell(spec, shape, mesh)
+    compiled = lower_cell(cell).compile()
+    t_compile = time.time() - t0
+
+    mem = compiled.memory_analysis()
+    txt = compiled.as_text()
+    cost = loop_aware_cost(txt)
+    ovh = bf16_legalization_overhead(txt)
+    raw = (mem.argument_size_in_bytes + mem.temp_size_in_bytes
+           + mem.output_size_in_bytes - mem.alias_size_in_bytes)
+
+    terms = {
+        "compute_s": cost["flops"] / 197e12,
+        "memory_s": cost["bytes"] / 819e9,
+        "collective_s": cost["ici_bytes"] / 50e9,
+    }
+    rec = {
+        "arch": args.arch, "shape": args.shape, "mesh": args.mesh,
+        "tag": args.tag, "overrides": args.set, "rules": args.rules,
+        "accum": args.accum, "compile_s": round(t_compile, 1),
+        "terms": terms,
+        "bound": max(terms, key=terms.get),
+        "t_bound_s": max(terms.values()),
+        "mem_raw_gib": raw / 2**30,
+        "mem_adj_gib": (raw - ovh) / 2**30,
+        "collective_counts": cost["collective_counts"],
+        "collective_bytes": cost["collective_bytes"],
+        "flops": cost["flops"], "bytes": cost["bytes"],
+        "ici_bytes": cost["ici_bytes"],
+    }
+    OUT.mkdir(parents=True, exist_ok=True)
+    (OUT / f"{args.arch}__{args.shape}__{args.tag}.json").write_text(
+        json.dumps(rec, indent=2))
+    print(json.dumps({k: v for k, v in rec.items()
+                      if k not in ("collective_counts",)}, indent=2))
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,0 +1,71 @@
+"""§3.3.1 table analog: reuse-profile computation throughput.
+
+The paper's speed contribution is replacing the O(N·M) stack method
+with an O(N·log M) tree; this benchmark measures both on the same
+traces (refs/s), plus the per-set variant the exact simulator uses.
+"""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from benchmarks.common import fmt_table, save_json
+from repro.core.reuse.distance import (
+    per_set_reuse_distances, reuse_distances, reuse_distances_ref,
+)
+
+
+def synthetic_trace(n: int, working_set: int, seed: int = 0) -> np.ndarray:
+    """Zipf-ish reuse: mixes hot lines with cold streaming."""
+    rng = np.random.default_rng(seed)
+    hot = rng.integers(0, working_set // 8, n // 2)
+    cold = rng.integers(0, working_set, n - n // 2)
+    mix = np.concatenate([hot, cold])
+    rng.shuffle(mix)
+    return (mix * 64 + 4096).astype(np.int64)
+
+
+def run(quick: bool = True) -> dict:
+    sizes = [20_000, 60_000] if quick else [20_000, 60_000, 200_000]
+    rows, records = [], []
+    for n in sizes:
+        tr = synthetic_trace(n, working_set=n // 4)
+        t0 = time.perf_counter()
+        rd_tree = reuse_distances(tr, 64)
+        t_tree = time.perf_counter() - t0
+
+        t_stack = None
+        if n <= 60_000:
+            t0 = time.perf_counter()
+            rd_stack = reuse_distances_ref((tr // 64))
+            t_stack = time.perf_counter() - t0
+            assert np.array_equal(rd_tree, rd_stack), "tree != stack oracle"
+
+        t0 = time.perf_counter()
+        per_set_reuse_distances(tr, line_size=64, num_sets=64)
+        t_set = time.perf_counter() - t0
+
+        rows.append([
+            n,
+            f"{n / t_tree:,.0f}",
+            f"{n / t_stack:,.0f}" if t_stack else "-",
+            f"{n / t_set:,.0f}",
+            f"{t_stack / t_tree:.1f}x" if t_stack else "-",
+        ])
+        records.append({
+            "n": n, "tree_refs_per_s": n / t_tree,
+            "stack_refs_per_s": (n / t_stack) if t_stack else None,
+            "per_set_refs_per_s": n / t_set,
+        })
+    print(fmt_table(
+        ["refs", "tree refs/s", "stack refs/s", "per-set refs/s",
+         "tree speedup"], rows))
+    summary = {"records": records}
+    save_json("reuse_throughput" + ("_quick" if quick else ""), summary)
+    return summary
+
+
+if __name__ == "__main__":
+    import sys
+    run(quick="--full" not in sys.argv)

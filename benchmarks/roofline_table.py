@@ -1,0 +1,81 @@
+"""§Roofline: the 40-cell table from the dry-run records.
+
+Reads experiments/dryrun/*.json (written by repro.launch.dryrun),
+derives the three roofline terms per (arch x shape x mesh) and prints
+the table + per-cell bottleneck.  ``loop_aware_cost`` is the primary
+source (XLA's cost_analysis counts while bodies once — probe-verified);
+both are recorded.
+"""
+from __future__ import annotations
+
+import json
+from pathlib import Path
+
+from benchmarks.common import save_json
+from repro.analysis.roofline import Roofline, format_table, model_flops
+from repro.hw.targets import TPU_V5E
+
+DRYRUN_DIR = Path(__file__).resolve().parents[1] / "experiments" / "dryrun"
+
+
+def load_records(mesh: str | None = None) -> list[dict]:
+    recs = []
+    for p in sorted(DRYRUN_DIR.glob("*.json")):
+        r = json.loads(p.read_text())
+        if mesh and r.get("mesh") != mesh:
+            continue
+        recs.append(r)
+    return recs
+
+
+def roofline_from_record(rec: dict) -> Roofline:
+    from repro.configs import SHAPES, get_arch
+
+    shape = SHAPES[rec["shape"]]
+    chips = 512 if rec["mesh"] == "multipod" else 256
+    cost = rec.get("loop_aware_cost") or {}
+    flops = float(cost.get("flops", 0.0))
+    bytes_acc = float(cost.get("bytes", 0.0))
+    ici = float(cost.get("ici_bytes", 0.0))
+    factor = get_arch(rec["arch"]).flops_token_factor
+    mf = factor * model_flops(rec["kind"], rec["active_param_count"],
+                              shape.seq_len, shape.global_batch) / chips
+    return Roofline(
+        arch=rec["arch"], shape=rec["shape"], mesh=rec["mesh"],
+        kind=rec["kind"],
+        compute_s=flops / TPU_V5E.peak_flops_bf16,
+        memory_s=bytes_acc / TPU_V5E.hbm_bandwidth,
+        collective_s=ici / TPU_V5E.ici_bandwidth,
+        model_flops_chip=mf,
+        hlo_flops_chip=flops,
+        chips=chips,
+        useful_bytes_chip=float(rec["memory"]["argument_bytes"]),
+    )
+
+
+def run(mesh: str = "pod") -> dict:
+    recs = load_records(mesh)
+    ok = [r for r in recs if r["status"] == "ok"]
+    skipped = [r for r in recs if r["status"] == "skipped"]
+    rows = [roofline_from_record(r) for r in ok]
+    rows.sort(key=lambda r: (r.arch, r.shape))
+    print(format_table(rows))
+    print(f"\n{len(ok)} cells analysed, {len(skipped)} skipped "
+          f"(sub-quadratic-attention rule) on mesh={mesh}")
+    for r in skipped:
+        print(f"  SKIP {r['arch']} x {r['shape']}: {r['reason'][:60]}...")
+    payload = {
+        "mesh": mesh,
+        "cells": [r.row() for r in rows],
+        "skipped": [
+            {"arch": r["arch"], "shape": r["shape"], "reason": r["reason"]}
+            for r in skipped
+        ],
+    }
+    save_json(f"roofline_{mesh}", payload)
+    return payload
+
+
+if __name__ == "__main__":
+    import sys
+    run("multipod" if "--multipod" in sys.argv else "pod")

@@ -1,0 +1,38 @@
+"""Example 4 — the paper's technique as a first-class framework
+feature: rank candidate configurations *before compiling them*.
+
+PPT-Multicore's selling point is pricing core counts / cache designs
+from one trace.  Translated to this framework: price (arch x shape)
+cells from the dry-run artifacts — three roofline terms + the reuse-
+profile VMEM refinement — and rank the bottlenecks, without any new
+compile.
+
+    PYTHONPATH=src python examples/rank_configs.py
+"""
+import sys
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).resolve().parents[1]))  # benchmarks/
+from benchmarks.roofline_table import load_records, roofline_from_record
+
+records = [r for r in load_records("pod") if r["status"] == "ok"]
+if not records:
+    raise SystemExit(
+        "no dry-run records; run: PYTHONPATH=src python -m "
+        "repro.launch.dryrun --all --mesh pod")
+
+rows = [roofline_from_record(r) for r in records]
+rows.sort(key=lambda r: r.roofline_fraction)
+
+print(f"{len(rows)} compiled cells, ranked worst-first by roofline "
+      f"fraction:\n")
+print(f"{'cell':<38} {'bound':<11} {'t_bound':>9} {'roofl%':>7}")
+for r in rows:
+    cell = f"{r.arch} x {r.shape}"
+    print(f"{cell:<38} {r.bottleneck:<11} {r.t_step_bound_s:>8.4f}s "
+          f"{100 * r.roofline_fraction:>6.1f}%")
+
+worst = rows[0]
+coll = max(rows, key=lambda r: r.collective_s / max(r.t_step_bound_s, 1e-12))
+print(f"\nhillclimb picks -> worst fraction: {worst.arch} x {worst.shape}; "
+      f"most collective-bound: {coll.arch} x {coll.shape}")

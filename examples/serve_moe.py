@@ -1,0 +1,13 @@
+"""Example 3 — batched serving of a (reduced) MoE model with sliding-
+window attention: prefill once, decode with KV-cache reuse.
+
+    PYTHONPATH=src python examples/serve_moe.py
+"""
+from repro.launch.serve import main as serve_main
+
+rc = serve_main([
+    "--arch", "mixtral-8x7b", "--reduced",
+    "--batch", "4", "--prompt-len", "32", "--gen", "12",
+    "--temperature", "0.8",
+])
+assert rc == 0

@@ -1,0 +1,34 @@
+"""Example 2 — end-to-end training driver (deliverable b).
+
+Trains a reduced llama3-family model for a few hundred steps on host
+devices with checkpointing, then restarts from the checkpoint to prove
+crash-safe resume.  The same driver scales to the production mesh
+(--production-mesh on a real pod).
+
+    PYTHONPATH=src python examples/train_lm.py
+"""
+import shutil
+import tempfile
+
+from repro.launch.train import main as train_main
+
+ckpt = tempfile.mkdtemp(prefix="repro_ckpt_")
+try:
+    print("=== phase 1: train 120 steps with checkpoints ===")
+    rc = train_main([
+        "--arch", "llama3-8b", "--reduced", "--steps", "120",
+        "--batch", "8", "--seq", "128",
+        "--checkpoint-dir", ckpt, "--checkpoint-every", "50",
+    ])
+    assert rc == 0
+
+    print("\n=== phase 2: simulate restart, resume to step 160 ===")
+    rc = train_main([
+        "--arch", "llama3-8b", "--reduced", "--steps", "160",
+        "--batch", "8", "--seq", "128",
+        "--checkpoint-dir", ckpt, "--resume",
+    ])
+    assert rc == 0
+    print("\nresume OK — training is crash-safe.")
+finally:
+    shutil.rmtree(ckpt, ignore_errors=True)

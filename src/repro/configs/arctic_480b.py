@@ -1,0 +1,42 @@
+"""arctic-480b [moe] — 128 experts top-2 + dense residual MLP,
+hf:Snowflake/snowflake-arctic-base.
+
+35L, d_model=7168, 56 heads (GQA kv=8), per-expert d_ff=4864,
+vocab=32000.  Memory plan (DESIGN.md §6): experts sharded over "model"
+(8/chip — true EP), every weight FSDP-sharded over "data"; Adafactor
+(factored second moment) + bf16 grad accumulators keep the 480B state
+under 16 GB/chip.  56 heads -> sequence-parallel attention like yi-34b.
+"""
+import jax.numpy as jnp
+
+from repro.configs.base import FULL_ATTN_SKIP, ArchSpec
+from repro.models.moe import MoEConfig
+from repro.models.transformer import TransformerConfig
+
+SPEC = ArchSpec(
+    arch_id="arctic-480b",
+    family_name="transformer",
+    config=TransformerConfig(
+        layers=35,
+        d_model=7168,
+        heads=56,
+        kv_heads=8,
+        d_ff=4864,
+        vocab=32000,
+        head_dim=128,
+        attn_sp=True,
+        sp_residuals=True,      # §Perf cell 2 (3.3x collective win)
+        moe=MoEConfig(num_experts=128, top_k=2, tokens_per_group=1024),
+        dense_ff=True,          # arctic's dense residual MLP branch
+    ),
+    # expert d_ff unsharded (EP over "model" instead); act_mlp must match
+    # or the [G,E,C,F] expert activations would map "model" twice
+    rules={"heads": None, "mlp": None, "act_mlp": None},
+    serve_rules={"embed": "dp"},          # weights must stay fully sharded
+    grad_accum={"train_4k": 1},
+    accum_dtype=jnp.bfloat16,
+    optimizer_name="adafactor",
+    skip={"long_500k": FULL_ATTN_SKIP},
+    notes="most-collective-bound hillclimb candidate: EP all-to-all + "
+          "FSDP gathers",
+)

@@ -1,0 +1,125 @@
+"""ArchSpec: binds a model family + exact config to the assigned input
+shapes, sharding-rule overrides, and memory knobs (grad accumulation).
+
+Every assigned architecture gets one ``<arch>.py`` exporting ``SPEC``;
+the registry in ``repro.configs`` exposes them by ``--arch`` id.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.api import Family, get_family
+
+
+@dataclasses.dataclass(frozen=True)
+class Shape:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str  # "train" | "prefill" | "decode"
+
+
+TRAIN_4K = Shape("train_4k", 4096, 256, "train")
+PREFILL_32K = Shape("prefill_32k", 32768, 32, "prefill")
+DECODE_32K = Shape("decode_32k", 32768, 128, "decode")
+LONG_500K = Shape("long_500k", 524288, 1, "decode")
+SHAPES = {s.name: s for s in (TRAIN_4K, PREFILL_32K, DECODE_32K, LONG_500K)}
+
+FULL_ATTN_SKIP = (
+    "pure full attention — long_500k requires sub-quadratic attention "
+    "(DESIGN.md §4); decode over a 512k KV cache would be O(S) per token "
+    "with an O(S) resident cache"
+)
+
+
+@dataclasses.dataclass(frozen=True)
+class ArchSpec:
+    arch_id: str
+    family_name: str
+    config: Any
+    rules: dict[str, str | None] = dataclasses.field(default_factory=dict)
+    serve_rules: dict[str, str | None] = dataclasses.field(default_factory=dict)
+    grad_accum: dict[str, int] = dataclasses.field(default_factory=dict)
+    accum_dtype: Any = jnp.float32
+    optimizer_name: str = "adamw"
+    peak_lr: float = 3e-4
+    skip: dict[str, str] = dataclasses.field(default_factory=dict)
+    notes: str = ""
+    # MODEL_FLOPS accounting: fraction of shape.seq_len each parameter
+    # actually processes (enc-dec splits seq_len into src/tgt halves)
+    flops_token_factor: float = 1.0
+    # ZeRO-1 style: optimizer-state sharding rules may differ from the
+    # parameter rules (e.g. params TP-resident, moments dp+tp sharded)
+    opt_rules: dict[str, str | None] = dataclasses.field(default_factory=dict)
+
+    @property
+    def family(self) -> Family:
+        return get_family(self.family_name)
+
+    @property
+    def vocab(self) -> int:
+        cfg = self.config
+        return getattr(cfg, "vocab", None) or cfg.backbone.vocab
+
+    def shapes(self) -> list[Shape]:
+        return [s for s in SHAPES.values() if s.name not in self.skip]
+
+    def rules_for(self, kind: str) -> dict[str, str | None]:
+        merged = dict(self.rules)
+        if kind != "train":
+            merged.update(self.serve_rules)
+        return merged
+
+    # --- abstract inputs (ShapeDtypeStruct stand-ins; nothing allocated) ---
+
+    def input_specs(self, shape: Shape) -> dict[str, jax.ShapeDtypeStruct]:
+        b, s = shape.global_batch, shape.seq_len
+        i32, f = jnp.int32, getattr(self.config, "dtype", jnp.bfloat16)
+        sds = jax.ShapeDtypeStruct
+        if self.family_name == "encdec":
+            d = self.config.d_model
+            if shape.kind == "train":
+                return {"frames": sds((b, s // 2, d), f),
+                        "tokens": sds((b, s // 2), i32),
+                        "labels": sds((b, s // 2), i32)}
+            if shape.kind == "prefill":
+                return {"frames": sds((b, s // 2, d), f),
+                        "tokens": sds((b, s // 2), i32)}
+            return {"token": sds((b, 1), i32)}
+        if self.family_name == "vlm":
+            cfg = self.config
+            p = cfg.num_patches
+            dt = cfg.backbone.dtype
+            if shape.kind == "train":
+                return {"patches": sds((b, p, cfg.clip_dim), dt),
+                        "tokens": sds((b, s - p), i32),
+                        "labels": sds((b, s - p), i32)}
+            if shape.kind == "prefill":
+                return {"patches": sds((b, p, cfg.clip_dim), dt),
+                        "tokens": sds((b, s - p), i32)}
+            return {"token": sds((b, 1), i32)}
+        if shape.kind == "train":
+            return {"tokens": sds((b, s), i32), "labels": sds((b, s), i32)}
+        if shape.kind == "prefill":
+            return {"tokens": sds((b, s), i32)}
+        return {"token": sds((b, 1), i32)}
+
+    def batch_axes(self, shape: Shape) -> dict[str, tuple]:
+        specs = self.input_specs(shape)
+        return {
+            name: ("act_batch",) + (None,) * (len(s.shape) - 1)
+            for name, s in specs.items()
+        }
+
+    def cache_kwargs(self, shape: Shape) -> dict[str, int]:
+        b, s = shape.global_batch, shape.seq_len
+        if self.family_name == "encdec":
+            return {"batch": b, "max_len": s // 2, "src_len": s // 2}
+        return {"batch": b, "max_len": s}
+
+    def grad_accum_for(self, shape: Shape) -> int:
+        return self.grad_accum.get(shape.name, 1)

@@ -1,0 +1,28 @@
+"""codeqwen1.5-7b [dense] — qwen1.5-arch, hf:Qwen/CodeQwen1.5-7B.
+
+32L, d_model=4096, 32 heads (kv=32 — full MHA KV), d_ff=13440,
+vocab=92416.  kv_heads=32 divides the model axis, so the decode cache
+can shard over kv heads as well as sequence.
+"""
+from repro.configs.base import FULL_ATTN_SKIP, ArchSpec
+from repro.models.transformer import TransformerConfig
+
+SPEC = ArchSpec(
+    arch_id="codeqwen1.5-7b",
+    family_name="transformer",
+    config=TransformerConfig(
+        layers=32,
+        d_model=4096,
+        heads=32,
+        kv_heads=32,
+        d_ff=13440,
+        vocab=92416,
+        head_dim=128,
+        rope_theta=1_000_000.0,
+    ),
+    # full-MHA KV: shard the decode cache over kv heads (32/16) instead
+    # of sequence — no reshard churn against the head-TP attention math
+    rules={"kv_heads": "tp", "act_kv_heads": "tp", "act_kv_seq": None},
+    grad_accum={"train_4k": 4},
+    skip={"long_500k": FULL_ATTN_SKIP},
+)

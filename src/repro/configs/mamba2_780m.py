@@ -1,0 +1,41 @@
+"""mamba2-780m [ssm] — SSD (state-space duality), arXiv:2405.21060.
+
+48L, d_model=1536 (d_inner=3072, 48 SSD heads of P=64), ssm_state=128,
+vocab=50280, attention-free.  ``long_500k`` RUNS: decode state is O(1).
+"""
+from repro.configs.base import ArchSpec
+from repro.models.ssm import Mamba2Config
+
+SPEC = ArchSpec(
+    arch_id="mamba2-780m",
+    family_name="ssm",
+    config=Mamba2Config(
+        layers=48,
+        d_model=1536,
+        vocab=50280,
+        ssm_state=128,
+        head_dim=64,
+        tie_embeddings=True,
+    ),
+    # §Perf cell 3: a 780M model is over-sharded at TP=16 — flat 256-way
+    # DP (batch over data x model) with a ZeRO-sharded optimizer is 2.8x
+    # faster at the bound; serving re-shards batch over "data" only
+    # (decode batch 128 doesn't divide 256).
+    rules={
+        "act_batch": "dp+tp", "inner": None, "conv_dim": None,
+        "ssm_heads": None, "act_mlp": None, "act_heads": None,
+        "vocab": None, "act_vocab": None, "embed": None,
+    },
+    opt_rules={"embed": "dp+tp"},
+    # serving keeps the TP layout: prefill batch 32 / decode batch 128
+    # can't divide the 256-chip grid, so flat-DP would idle the model
+    # axis (measured: 3.7x worse prefill bound)
+    serve_rules={
+        "act_batch": "dp", "inner": "tp", "conv_dim": "tp",
+        "ssm_heads": "tp", "act_mlp": "tp", "act_heads": "tp",
+        "vocab": "tp", "act_vocab": "tp", "embed": "dp",
+    },
+    grad_accum={"train_4k": 1},
+    notes="paper-representative cell: the SSD chunked scan is the Pallas "
+          "kernel hot spot (kernels/ssd_scan)",
+)

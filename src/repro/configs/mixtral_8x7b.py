@@ -1,0 +1,32 @@
+"""mixtral-8x7b [moe] — 8 experts top-2 + sliding-window attention,
+arXiv:2401.04088.
+
+32L, d_model=4096, 32 heads (GQA kv=8), per-expert d_ff=14336,
+vocab=32000, window=4096.  8 experts < 16 devices -> experts stay
+replicated and the expert FFN dim is TP-sharded (TP-MoE).  SWA is
+sub-quadratic, so ``long_500k`` RUNS (banded attention in prefill;
+decode reads only the masked window).
+"""
+from repro.configs.base import ArchSpec
+from repro.models.moe import MoEConfig
+from repro.models.transformer import TransformerConfig
+
+SPEC = ArchSpec(
+    arch_id="mixtral-8x7b",
+    family_name="transformer",
+    config=TransformerConfig(
+        layers=32,
+        d_model=4096,
+        heads=32,
+        kv_heads=8,
+        d_ff=14336,
+        vocab=32000,
+        head_dim=128,
+        rope_theta=1_000_000.0,
+        window=4096,
+        moe=MoEConfig(num_experts=8, top_k=2, tokens_per_group=4096),
+        dense_ff=False,
+    ),
+    rules={"experts": None},   # 8 % 16 != 0 -> TP-MoE over the FFN dim
+    grad_accum={"train_4k": 4},
+)

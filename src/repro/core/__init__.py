@@ -1,0 +1,19 @@
+"""PPT-Multicore core: reuse-profile analytical performance prediction.
+
+The paper's pipeline (Fig. 1):  labeled trace -> mimicked private
+traces (Alg. 1) -> interleaved shared trace (Alg. 2) -> PRD/CRD reuse
+profiles -> SDCM hit rates (Eq. 1-3) -> analytical runtime (Eq. 4-7).
+"""
+from repro.core.predictor import PPTMulticorePredictor, Prediction
+from repro.core.runtime_model import OpCounts, predict_runtime_s
+from repro.core.sdcm import hit_rate, phit_given_d, phit_given_d_np
+
+__all__ = [
+    "PPTMulticorePredictor",
+    "Prediction",
+    "OpCounts",
+    "predict_runtime_s",
+    "hit_rate",
+    "phit_given_d",
+    "phit_given_d_np",
+]

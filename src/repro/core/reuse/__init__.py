@@ -1,0 +1,27 @@
+from repro.core.reuse.distance import (
+    INF_RD,
+    per_set_reuse_distances,
+    reuse_distances,
+    reuse_distances_ref,
+)
+from repro.core.reuse.profile import (
+    ReuseProfile,
+    log2_binned,
+    profile_from_distances,
+    profile_from_trace,
+)
+from repro.core.reuse.crd import MulticoreProfiles, crd_profile, multicore_profiles
+
+__all__ = [
+    "INF_RD",
+    "per_set_reuse_distances",
+    "reuse_distances",
+    "reuse_distances_ref",
+    "ReuseProfile",
+    "log2_binned",
+    "profile_from_distances",
+    "profile_from_trace",
+    "MulticoreProfiles",
+    "crd_profile",
+    "multicore_profiles",
+]

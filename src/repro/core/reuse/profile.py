@@ -1,0 +1,103 @@
+"""Reuse profiles P(D) — paper §2.3 (Table 2) and §3.3.1.
+
+A reuse profile is the histogram of reuse distances of a trace: the
+distance values, their counts, and the empirical probability P(D).
+``INF_RD`` (-1) carries the compulsory-miss mass (D = ∞).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import numpy as np
+
+from .distance import INF_RD, reuse_distances
+
+
+@dataclass(frozen=True)
+class ReuseProfile:
+    """Histogram of reuse distances.
+
+    Attributes
+    ----------
+    distances : sorted distinct distances; ``INF_RD`` first when present.
+    counts    : occurrence count per distance.
+    total     : total number of accesses (== counts.sum()).
+    """
+
+    distances: np.ndarray
+    counts: np.ndarray
+    total: int
+
+    @property
+    def probabilities(self) -> np.ndarray:
+        return self.counts / max(self.total, 1)
+
+    @property
+    def inf_fraction(self) -> float:
+        """Compulsory-miss mass P(D = ∞)."""
+        mask = self.distances == INF_RD
+        if not mask.any():
+            return 0.0
+        return float(self.counts[mask][0]) / max(self.total, 1)
+
+    def finite(self) -> tuple[np.ndarray, np.ndarray]:
+        """(distances, probabilities) excluding the ∞ bucket."""
+        mask = self.distances != INF_RD
+        return self.distances[mask], self.probabilities[mask]
+
+    def merged_with(self, other: "ReuseProfile") -> "ReuseProfile":
+        dists = np.concatenate([self.distances, other.distances])
+        counts = np.concatenate([self.counts, other.counts])
+        return profile_from_pairs(dists, counts)
+
+    def scaled(self, factor: float) -> "ReuseProfile":
+        """Scale counts (e.g. trace-sampling extrapolation)."""
+        counts = np.maximum(np.round(self.counts * factor), 0).astype(np.int64)
+        return ReuseProfile(self.distances, counts, int(counts.sum()))
+
+
+def profile_from_pairs(distances, counts) -> ReuseProfile:
+    distances = np.asarray(distances, dtype=np.int64)
+    counts = np.asarray(counts, dtype=np.int64)
+    order = np.argsort(distances, kind="stable")
+    distances, counts = distances[order], counts[order]
+    uniq, start = np.unique(distances, return_index=True)
+    summed = np.add.reduceat(counts, start) if len(distances) else counts[:0]
+    return ReuseProfile(uniq, summed.astype(np.int64), int(summed.sum()))
+
+
+def profile_from_distances(rds) -> ReuseProfile:
+    """Build a reuse profile from raw reuse distances (Table 2)."""
+    rds = np.asarray(rds, dtype=np.int64)
+    uniq, counts = np.unique(rds, return_counts=True)
+    return ReuseProfile(uniq, counts.astype(np.int64), int(rds.size))
+
+
+def profile_from_trace(addresses, line_size: int = 1) -> ReuseProfile:
+    return profile_from_distances(reuse_distances(addresses, line_size))
+
+
+def log2_binned(profile: ReuseProfile, num_bins: int = 64) -> ReuseProfile:
+    """Coarsen a profile into log2 bins (keeps SDCM accuracy, shrinks size).
+
+    Bin representative = geometric-ish midpoint; the ∞ bucket is kept.
+    """
+    dists, counts = profile.distances, profile.counts
+    inf_mask = dists == INF_RD
+    fin_d, fin_c = dists[~inf_mask], counts[~inf_mask]
+    out_d, out_c = [], []
+    if inf_mask.any():
+        out_d.append(INF_RD)
+        out_c.append(int(counts[inf_mask].sum()))
+    if fin_d.size:
+        bins = np.zeros_like(fin_d)
+        pos = fin_d > 0
+        bins[pos] = np.floor(np.log2(fin_d[pos])).astype(np.int64) + 1
+        bins = np.minimum(bins, num_bins - 1)
+        for b in np.unique(bins):
+            sel = bins == b
+            w = fin_c[sel].astype(np.float64)
+            rep = int(round(float(np.average(fin_d[sel], weights=w))))
+            out_d.append(rep)
+            out_c.append(int(w.sum()))
+    return profile_from_pairs(np.array(out_d), np.array(out_c))

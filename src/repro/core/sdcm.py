@@ -1,0 +1,122 @@
+"""SDCM — the Brehob–Enbody analytical cache model (paper Eq. 1–3).
+
+Conditional hit probability of an access with reuse distance D on an
+A-way associative cache of B blocks:
+
+    P(h | D) = sum_{a=0}^{A-1} C(D, a) (A/B)^a ((B-A)/B)^(D-a)      (Eq. 1)
+
+i.e. the CDF of Binomial(D, A/B) at A-1.  Direct-mapped (A=1) reduces to
+((B-1)/B)^D (Eq. 2).  The unconditional program hit rate folds the reuse
+profile (Eq. 3):  P(h) = sum_i P(D_i) · P(h | D_i).
+
+Three implementations:
+  * ``phit_given_d``      — JAX, numerically-stable binomial CDF via the
+                            regularized incomplete beta function;
+  * ``phit_given_d_np``   — float64 numpy oracle (log-space term sum);
+  * ``kernels/sdcm``      — Pallas TPU kernel (recurrence sum), validated
+                            against the numpy oracle in interpret mode.
+"""
+from __future__ import annotations
+
+import math
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+from jax.scipy.special import betainc, gammaln, logsumexp
+
+from .reuse.distance import INF_RD
+from .reuse.profile import ReuseProfile
+
+# Associativities up to this bound use the explicit log-space binomial
+# sum (exact to ~1e-6 in f32); beyond it, betainc.  f32 betainc drifts
+# by ~1e-2 for large D with tiny A/B, the log-space sum does not.
+_LOGSPACE_MAX_ASSOC = 64
+
+
+def _binom_cdf_logspace(df: jnp.ndarray, assoc: int, p: float) -> jnp.ndarray:
+    """P[Bin(D, p) <= assoc-1] via a log-space term sum over k < assoc.
+
+    log C(D,k) is built incrementally (cumsum of log((D-j+1)/j)) —
+    magnitudes stay ~k·log(D), so f32 keeps ~1e-6 accuracy where the
+    gammaln-difference form catastrophically cancels at large D.
+    """
+    d_col = df[..., None]  # [..., 1]
+    j = jnp.arange(1, assoc, dtype=jnp.float32)  # [A-1]
+    ratios = jnp.log(jnp.maximum(d_col - j + 1.0, 1e-30)) - jnp.log(j)
+    log_comb = jnp.concatenate(
+        [jnp.zeros_like(d_col), jnp.cumsum(ratios, axis=-1)], axis=-1
+    )  # [..., A] : log C(D, k) for k = 0..A-1
+    k = jnp.arange(assoc, dtype=jnp.float32)
+    log_terms = log_comb + k * jnp.log(p) + (d_col - k) * jnp.log1p(-p)
+    log_terms = jnp.where(k <= d_col, log_terms, -jnp.inf)
+    return jnp.minimum(jnp.exp(logsumexp(log_terms, axis=-1)), 1.0)
+
+
+def phit_given_d(d: jnp.ndarray, assoc: int, blocks: int) -> jnp.ndarray:
+    """P(h | D) for an array of reuse distances (INF_RD -> 0). JAX path."""
+    d = jnp.asarray(d)
+    df = d.astype(jnp.float32)
+    a = float(assoc)
+    b = float(blocks)
+    if assoc >= blocks:
+        # fully associative: exact LRU rule — hit iff D < B.
+        p = jnp.where(df < b, 1.0, 0.0)
+    elif assoc == 1:
+        p = jnp.exp(df * jnp.log1p(-1.0 / b))  # Eq. 2, stable form
+    elif assoc <= _LOGSPACE_MAX_ASSOC:
+        p = jnp.where(df <= a - 1.0, 1.0, _binom_cdf_logspace(df, assoc, a / b))
+    else:
+        # P[Bin(D, A/B) <= A-1] = I_{1-A/B}(D-A+1, A)
+        x = (b - a) / b
+        p = jnp.where(
+            df <= a - 1.0,
+            1.0,
+            betainc(jnp.maximum(df - a + 1.0, 1e-6), a, x),
+        )
+    return jnp.where(d == INF_RD, 0.0, p).astype(jnp.float32)
+
+
+def phit_given_d_np(d, assoc: int, blocks: int) -> np.ndarray:
+    """Float64 oracle: direct log-space summation of Eq. 1."""
+    d = np.asarray(d, dtype=np.int64)
+    out = np.zeros(d.shape, dtype=np.float64)
+    a_total, b_total = float(assoc), float(blocks)
+    if assoc >= blocks:
+        out = np.where((d >= 0) & (d < blocks), 1.0, 0.0)
+        return np.where(d == INF_RD, 0.0, out)
+    p = a_total / b_total
+    logp, log1mp = math.log(p), math.log1p(-p)
+    for i, dv in np.ndenumerate(d):
+        if dv == INF_RD:
+            out[i] = 0.0
+        elif dv <= assoc - 1:
+            out[i] = 1.0
+        else:
+            s = 0.0
+            for k in range(assoc):
+                lg = (
+                    math.lgamma(dv + 1)
+                    - math.lgamma(k + 1)
+                    - math.lgamma(dv - k + 1)
+                    + k * logp
+                    + (dv - k) * log1mp
+                )
+                s += math.exp(lg)
+            out[i] = min(1.0, s)
+    return out
+
+
+def hit_rate(profile: ReuseProfile, assoc: int, blocks: int) -> float:
+    """Unconditional P(h) (Eq. 3) from a reuse profile."""
+    if profile.total == 0:
+        return 0.0
+    ph = phit_given_d_np(profile.distances, assoc, blocks)
+    return float(np.dot(profile.probabilities, ph))
+
+
+def hit_rate_jax(profile: ReuseProfile, assoc: int, blocks: int) -> float:
+    ph = phit_given_d(jnp.asarray(profile.distances), assoc, blocks)
+    pr = jnp.asarray(profile.probabilities, dtype=jnp.float32)
+    return float(jnp.dot(pr, ph))

@@ -1,0 +1,19 @@
+from repro.hw.targets import (
+    BROADWELL_E5_2699V4,
+    CPU_TARGETS,
+    HASWELL_I7_5960X,
+    TPU_V5E,
+    CPUTarget,
+    TPUTarget,
+    ZEN2_EPYC_7702P,
+)
+
+__all__ = [
+    "BROADWELL_E5_2699V4",
+    "CPU_TARGETS",
+    "HASWELL_I7_5960X",
+    "TPU_V5E",
+    "CPUTarget",
+    "TPUTarget",
+    "ZEN2_EPYC_7702P",
+]

@@ -1,0 +1,140 @@
+"""Hardware targets.
+
+* The paper's three CPUs (Table 5) with latency/throughput parameters
+  taken from vendor documentation, Agner Fog's instruction tables and
+  7-cpu.com — same sources the paper cites (§4.2).  Values are modeling
+  parameters, not measurements from this container.
+* TPU v5e-class chip (the adaptation target): peak bf16 FLOP/s, HBM
+  bandwidth, ICI link bandwidth per the project brief, VMEM treated as a
+  software-managed last-level "cache" for the reuse-profile model.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+
+from repro.core.cachesim import CacheLevelConfig
+
+
+@dataclass(frozen=True)
+class InstrTimings:
+    """Per-class instruction latency δ (cycles) and reciprocal throughput β
+    (cycles/instr) — paper §3.4.2 (T_CPU), sources: Agner Fog tables."""
+
+    delta_int: float
+    beta_int: float
+    delta_fp: float
+    beta_fp: float
+    delta_div: float
+    beta_div: float
+
+
+@dataclass(frozen=True)
+class CPUTarget:
+    name: str
+    microarch: str
+    cores: int
+    freq_hz: float
+    levels: tuple[CacheLevelConfig, ...]
+    # per-access latency δ (cycles) and reciprocal throughput β (cycles)
+    # per level, ending with RAM — Eq. 6/7 inputs.
+    level_latency_cy: tuple[float, ...]
+    level_beta_cy: tuple[float, ...]
+    ram_latency_cy: float
+    ram_beta_cy: float
+    instr: InstrTimings
+    shared_level: int = -1  # index of the level shared across cores (LLC)
+    word_bytes: int = 8
+
+    @property
+    def cycle_s(self) -> float:
+        return 1.0 / self.freq_hz
+
+
+# --- Table 5 CPUs -----------------------------------------------------------
+
+HASWELL_I7_5960X = CPUTarget(
+    name="i7-5960X",
+    microarch="haswell",
+    cores=8,
+    freq_hz=3.0e9,
+    levels=(
+        CacheLevelConfig("L1", 32 * 1024, 64, 8),
+        CacheLevelConfig("L2", 256 * 1024, 64, 8),
+        CacheLevelConfig("L3", 20 * 1024 * 1024, 64, 20),
+    ),
+    level_latency_cy=(4.0, 12.0, 36.0),
+    level_beta_cy=(0.5, 3.0, 8.0),
+    ram_latency_cy=240.0,
+    ram_beta_cy=14.0,
+    instr=InstrTimings(1.0, 0.25, 3.0, 0.5, 20.0, 8.0),
+)
+
+BROADWELL_E5_2699V4 = CPUTarget(
+    name="Xeon E5-2699 v4",
+    microarch="broadwell",
+    cores=22,
+    freq_hz=2.2e9,
+    levels=(
+        CacheLevelConfig("L1", 32 * 1024, 64, 8),
+        CacheLevelConfig("L2", 256 * 1024, 64, 8),
+        CacheLevelConfig("L3", 55 * 1024 * 1024, 64, 20),
+    ),
+    level_latency_cy=(4.0, 12.0, 50.0),
+    level_beta_cy=(0.5, 3.0, 10.0),
+    ram_latency_cy=200.0,
+    ram_beta_cy=12.0,
+    instr=InstrTimings(1.0, 0.25, 3.0, 0.5, 23.0, 10.0),
+)
+
+ZEN2_EPYC_7702P = CPUTarget(
+    name="EPYC 7702P",
+    microarch="zen2",
+    cores=64,
+    freq_hz=2.0e9,
+    levels=(
+        # Table 5 lists chip-aggregate sizes (2MB/32MB/256MB over 64
+        # cores); the per-core/CCX view used for simulation:
+        CacheLevelConfig("L1", 32 * 1024, 64, 8),
+        CacheLevelConfig("L2", 512 * 1024, 64, 8),
+        CacheLevelConfig("L3", 16 * 1024 * 1024, 64, 16),
+    ),
+    level_latency_cy=(4.0, 12.0, 39.0),
+    level_beta_cy=(0.5, 3.0, 9.0),
+    ram_latency_cy=230.0,
+    ram_beta_cy=13.0,
+    instr=InstrTimings(1.0, 0.25, 3.0, 0.5, 13.0, 5.0),
+)
+
+CPU_TARGETS = {
+    t.name: t
+    for t in (HASWELL_I7_5960X, BROADWELL_E5_2699V4, ZEN2_EPYC_7702P)
+}
+
+
+# --- TPU target (adaptation; constants from the project brief) --------------
+
+@dataclass(frozen=True)
+class TPUTarget:
+    name: str = "tpu-v5e"
+    peak_flops_bf16: float = 197e12      # per chip
+    hbm_bandwidth: float = 819e9         # bytes/s per chip
+    ici_bandwidth: float = 50e9          # bytes/s per link
+    hbm_bytes: int = 16 * 1024**3
+    vmem_bytes: int = 128 * 1024**2      # software-managed on-chip memory
+    vmem_line: int = 512                 # modeling granule for reuse analysis
+    chips_per_pod: int = 256
+    # latency terms for the Eq.6-style chain (seconds)
+    vmem_latency_s: float = 10e-9
+    hbm_latency_s: float = 500e-9
+    ici_latency_s: float = 1e-6
+    host_bandwidth: float = 25e9
+
+    def vmem_cache_config(self) -> CacheLevelConfig:
+        # VMEM modeled as a fully-associative "cache" over 512B granules:
+        # with A == B the SDCM rule degenerates to the exact LRU stack
+        # rule, matching a perfectly-managed scratchpad (DESIGN.md §2).
+        n = self.vmem_bytes // self.vmem_line
+        return CacheLevelConfig("VMEM", self.vmem_bytes, self.vmem_line, n)
+
+
+TPU_V5E = TPUTarget()

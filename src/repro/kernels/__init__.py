@@ -1,0 +1,7 @@
+"""Pallas TPU kernels for the framework's compute hot spots.
+
+Each subpackage ships the kernel (``pl.pallas_call`` + BlockSpec VMEM
+tiling), a jitted wrapper (``ops.py``) and a pure-jnp oracle
+(``ref.py``).  On this CPU-only container kernels are validated with
+``interpret=True``; on TPU the same calls compile natively.
+"""

@@ -1,0 +1,100 @@
+"""Pallas TPU flash-attention forward (blocked online softmax).
+
+TPU adaptation of the memory-efficient attention insight: never
+materialize the [Sq, Sk] score matrix in HBM.  Each grid step owns one
+(BLK_Q, D) query tile in VMEM and streams K/V in (BLK_K, D) tiles,
+maintaining the running max / normalizer / accumulator of the online
+softmax.  Matmul tiles are 128-aligned for the MXU; accumulation is
+f32 regardless of input dtype.
+
+Supports GQA (kv_heads <= q_heads via the grid index map — no K/V
+repeat is ever materialized) and causal masking (the KV stream stops at
+the diagonal chunk; the diagonal chunk is mask-corrected).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+DEFAULT_BLK_Q = 128
+DEFAULT_BLK_K = 128
+NEG_INF = -1e30
+
+
+def _flash_kernel(
+    q_ref, k_ref, v_ref, o_ref, *, blk_q: int, blk_k: int, causal: bool, scale: float
+):
+    qi = pl.program_id(2)
+    q = q_ref[0, 0].astype(jnp.float32) * scale      # [BLK_Q, D]
+    seq_k = k_ref.shape[2]
+    num_chunks = seq_k // blk_k
+
+    if causal:
+        # stream K/V only up to (and including) the diagonal chunk
+        last = jnp.minimum(((qi + 1) * blk_q + blk_k - 1) // blk_k, num_chunks)
+    else:
+        last = num_chunks
+
+    def body(j, carry):
+        acc, m, l = carry
+        kj = k_ref[0, 0, pl.ds(j * blk_k, blk_k), :].astype(jnp.float32)
+        vj = v_ref[0, 0, pl.ds(j * blk_k, blk_k), :].astype(jnp.float32)
+        s = q @ kj.T                                  # [BLK_Q, BLK_K]
+        if causal:
+            rows = qi * blk_q + jax.lax.broadcasted_iota(jnp.int32, s.shape, 0)
+            cols = j * blk_k + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+            s = jnp.where(cols <= rows, s, NEG_INF)
+        m_new = jnp.maximum(m, s.max(axis=-1))
+        p = jnp.exp(s - m_new[:, None])
+        alpha = jnp.exp(m - m_new)
+        l = l * alpha + p.sum(axis=-1)
+        acc = acc * alpha[:, None] + p @ vj
+        return acc, m_new, l
+
+    acc0 = jnp.zeros((blk_q, q_ref.shape[3]), jnp.float32)
+    m0 = jnp.full((blk_q,), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((blk_q,), jnp.float32)
+    acc, m, l = jax.lax.fori_loop(0, last, body, (acc0, m0, l0))
+    out = acc / jnp.maximum(l, 1e-30)[:, None]
+    o_ref[0, 0] = out.astype(o_ref.dtype)
+
+
+def flash_attention_pallas(
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    *,
+    causal: bool = False,
+    scale: float | None = None,
+    blk_q: int = DEFAULT_BLK_Q,
+    blk_k: int = DEFAULT_BLK_K,
+    interpret: bool = False,
+) -> jax.Array:
+    """q: [B, H, Sq, D]; k, v: [B, Hkv, Sk, D] with H % Hkv == 0."""
+    b, h, sq, d = q.shape
+    _, hkv, sk, _ = k.shape
+    assert h % hkv == 0, (h, hkv)
+    group = h // hkv
+    blk_q = min(blk_q, sq)
+    blk_k = min(blk_k, sk)
+    assert sq % blk_q == 0 and sk % blk_k == 0, (sq, sk, blk_q, blk_k)
+    if scale is None:
+        scale = d ** -0.5
+    kernel = functools.partial(
+        _flash_kernel, blk_q=blk_q, blk_k=blk_k, causal=causal, scale=scale
+    )
+    return pl.pallas_call(
+        kernel,
+        out_shape=jax.ShapeDtypeStruct(q.shape, q.dtype),
+        grid=(b, h, sq // blk_q),
+        in_specs=[
+            pl.BlockSpec((1, 1, blk_q, d), lambda bi, hi, qi: (bi, hi, qi, 0)),
+            pl.BlockSpec((1, 1, sk, d), lambda bi, hi, qi: (bi, hi // group, 0, 0)),
+            pl.BlockSpec((1, 1, sk, d), lambda bi, hi, qi: (bi, hi // group, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, blk_q, d), lambda bi, hi, qi: (bi, hi, qi, 0)),
+        interpret=interpret,
+    )(q, k, v)

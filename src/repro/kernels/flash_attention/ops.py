@@ -1,0 +1,28 @@
+"""Jitted public wrapper for flash attention."""
+from __future__ import annotations
+
+import functools
+
+import jax
+
+from .flash_attention import flash_attention_pallas
+
+
+@functools.partial(
+    jax.jit, static_argnames=("causal", "scale", "blk_q", "blk_k", "interpret")
+)
+def flash_attention(
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    *,
+    causal: bool = False,
+    scale: float | None = None,
+    blk_q: int = 128,
+    blk_k: int = 128,
+    interpret: bool = False,
+) -> jax.Array:
+    return flash_attention_pallas(
+        q, k, v, causal=causal, scale=scale, blk_q=blk_q, blk_k=blk_k,
+        interpret=interpret,
+    )

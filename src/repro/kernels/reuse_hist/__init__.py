@@ -1,0 +1,4 @@
+from .ops import reuse_histogram
+from .ref import reuse_hist_ref
+
+__all__ = ["reuse_histogram", "reuse_hist_ref"]

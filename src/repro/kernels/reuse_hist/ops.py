@@ -1,0 +1,31 @@
+"""Jitted public wrapper for the reuse-histogram Pallas kernel."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .reuse_hist import BLOCK_ROWS, LANES, NUM_BINS, reuse_hist_pallas_2d
+
+_TILE = BLOCK_ROWS * LANES
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def reuse_histogram(
+    d: jax.Array, w: jax.Array | None = None, *, interpret: bool = False
+) -> jax.Array:
+    """Weighted log2-binned histogram of a flat distance array.
+
+    Returns [NUM_BINS] f32; bin 0 is the D = inf (first-touch) mass.
+    """
+    d = d.astype(jnp.float32).ravel()
+    n = d.shape[0]
+    if w is None:
+        w = jnp.ones((n,), jnp.float32)
+    w = w.astype(jnp.float32).ravel()
+    padded = ((n + _TILE - 1) // _TILE) * _TILE
+    d2 = jnp.pad(d, (0, padded - n), constant_values=-1.0).reshape(-1, LANES)
+    w2 = jnp.pad(w, (0, padded - n)).reshape(-1, LANES)  # pad weight 0
+    out = reuse_hist_pallas_2d(d2, w2, interpret=interpret)
+    return out.reshape(NUM_BINS)

@@ -1,0 +1,13 @@
+"""Pure-jnp oracle for the reuse-histogram kernel."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from .reuse_hist import NUM_BINS, _bin_ids
+
+
+def reuse_hist_ref(d: jnp.ndarray, w: jnp.ndarray) -> jnp.ndarray:
+    bins = _bin_ids(d.astype(jnp.float32).ravel())
+    return jnp.zeros((NUM_BINS,), jnp.float32).at[bins].add(
+        w.astype(jnp.float32).ravel()
+    )

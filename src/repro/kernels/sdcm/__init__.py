@@ -1,0 +1,4 @@
+from .ops import sdcm_hit_probs, sdcm_hit_rate
+from .ref import sdcm_ref
+
+__all__ = ["sdcm_hit_probs", "sdcm_hit_rate", "sdcm_ref"]

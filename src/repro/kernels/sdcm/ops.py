@@ -1,0 +1,48 @@
+"""Jitted public wrapper for the SDCM Pallas kernel.
+
+Handles flat arrays of arbitrary length: pads to a whole number of
+(8, 128) tiles, reshapes, dispatches the kernel, unpads.  On non-TPU
+backends ``interpret=True`` executes the same kernel body in Python.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .sdcm import BLOCK_ROWS, LANES, sdcm_pallas_2d
+
+_TILE = BLOCK_ROWS * LANES
+
+
+@functools.partial(jax.jit, static_argnames=("assoc", "blocks", "interpret"))
+def sdcm_hit_probs(
+    d: jax.Array, *, assoc: int, blocks: int, interpret: bool = False
+) -> jax.Array:
+    """P(h|D) for a flat distance array (f32; -1 = first touch)."""
+    d = d.astype(jnp.float32).ravel()
+    if assoc >= blocks:
+        # fully associative degenerates to the exact LRU rule — no
+        # binomial math (and p = A/B = 1 would break the kernel's logs).
+        return jnp.where((d >= 0) & (d < blocks), 1.0, 0.0)
+    n = d.shape[0]
+    padded = ((n + _TILE - 1) // _TILE) * _TILE
+    d2 = jnp.pad(d, (0, padded - n), constant_values=-1.0).reshape(-1, LANES)
+    out = sdcm_pallas_2d(d2, assoc, blocks, interpret=interpret)
+    return out.ravel()[:n]
+
+
+@functools.partial(jax.jit, static_argnames=("assoc", "blocks", "interpret"))
+def sdcm_hit_rate(
+    d: jax.Array,
+    weights: jax.Array,
+    *,
+    assoc: int,
+    blocks: int,
+    interpret: bool = False,
+) -> jax.Array:
+    """Unconditional P(h) (Eq. 3): weighted fold of P(h|D)."""
+    probs = sdcm_hit_probs(d, assoc=assoc, blocks=blocks, interpret=interpret)
+    w = weights.astype(jnp.float32).ravel()
+    return jnp.dot(probs, w) / jnp.maximum(jnp.sum(w), 1e-30)

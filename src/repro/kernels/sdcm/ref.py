@@ -1,0 +1,12 @@
+"""Pure-jnp oracle for the SDCM kernel (same math as core.sdcm)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.core.sdcm import phit_given_d
+
+
+def sdcm_ref(d: jnp.ndarray, assoc: int, blocks: int) -> jnp.ndarray:
+    """P(h|D); d is float with -1.0 marking INF_RD."""
+    d_int = jnp.where(d < 0, -1, d.astype(jnp.int32))
+    return phit_given_d(d_int, assoc, blocks)

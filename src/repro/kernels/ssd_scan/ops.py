@@ -1,0 +1,22 @@
+"""Jitted public wrapper for the SSD chunked-scan kernel."""
+from __future__ import annotations
+
+import functools
+
+import jax
+
+from .ssd_scan import ssd_scan_pallas
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "interpret"))
+def ssd_scan(
+    x: jax.Array,
+    la: jax.Array,
+    b: jax.Array,
+    c: jax.Array,
+    *,
+    chunk: int = 128,
+    interpret: bool = False,
+) -> jax.Array:
+    """Chunked SSD scan.  x: [BH, S, P]; la: [BH, S]; b, c: [BH, S, N]."""
+    return ssd_scan_pallas(x, la, b, c, chunk=chunk, interpret=interpret)

@@ -1,0 +1,34 @@
+"""Pure-jnp oracle: sequential SSD recurrence via lax.scan."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def ssd_scan_ref(
+    x: jnp.ndarray, la: jnp.ndarray, b: jnp.ndarray, c: jnp.ndarray
+) -> jnp.ndarray:
+    """x: [BH, S, P]; la: [BH, S] (log decay); b, c: [BH, S, N]."""
+
+    def one(x1, la1, b1, c1):
+        n, p = b1.shape[-1], x1.shape[-1]
+
+        def step(h, inp):
+            xt, lat, bt, ct = inp
+            h = jnp.exp(lat) * h + jnp.outer(bt, xt)
+            return h, ct @ h
+
+        h0 = jnp.zeros((n, p), jnp.float32)
+        _, y = jax.lax.scan(
+            step,
+            h0,
+            (
+                x1.astype(jnp.float32),
+                la1.astype(jnp.float32),
+                b1.astype(jnp.float32),
+                c1.astype(jnp.float32),
+            ),
+        )
+        return y
+
+    return jax.vmap(one)(x, la, b, c).astype(x.dtype)

@@ -1,0 +1,148 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+# ^ MUST precede every other import: jax locks the device count on first
+# init.  This flag lives ONLY here — smoke tests and benches see 1 device.
+
+"""Multi-pod dry-run: lower + compile every (arch x input-shape) cell on
+the production meshes and record the roofline inputs.
+
+    PYTHONPATH=src python -m repro.launch.dryrun --arch llama3-8b \
+        --shape train_4k --mesh pod
+    PYTHONPATH=src python -m repro.launch.dryrun --all --mesh both
+
+Success of ``.lower().compile()`` for the 16x16 pod mesh AND the
+2x16x16 multi-pod mesh is the deliverable; ``memory_analysis()`` proves
+the cell fits 16 GB/chip, ``cost_analysis()`` + the HLO collective
+parse feed EXPERIMENTS.md §Roofline.
+"""
+import argparse
+import json
+import sys
+import time
+import traceback
+from pathlib import Path
+
+import jax
+
+from repro.configs import SHAPES, get_arch, list_archs
+from repro.launch.mesh import make_production_mesh
+from repro.launch.steps import build_cell, lower_cell
+
+OUT_DIR = Path(__file__).resolve().parents[3] / "experiments" / "dryrun"
+
+
+def run_cell(arch_id: str, shape_name: str, mesh_name: str,
+             out_dir: Path = OUT_DIR) -> dict:
+    spec = get_arch(arch_id)
+    shape = SHAPES[shape_name]
+    if shape_name in spec.skip:
+        rec = {"arch": arch_id, "shape": shape_name, "mesh": mesh_name,
+               "status": "skipped", "reason": spec.skip[shape_name]}
+        _write(rec, out_dir)
+        return rec
+
+    mesh = make_production_mesh(multi_pod=(mesh_name == "multipod"))
+    t0 = time.time()
+    cell = build_cell(spec, shape, mesh)
+    lowered = lower_cell(cell)
+    t_lower = time.time() - t0
+
+    t0 = time.time()
+    compiled = lowered.compile()
+    t_compile = time.time() - t0
+
+    mem = compiled.memory_analysis()
+    cost = compiled.cost_analysis()
+    print(f"[{arch_id} x {shape_name} x {mesh_name}] "
+          f"lower {t_lower:.1f}s compile {t_compile:.1f}s")
+    print("  memory_analysis:", _mem_dict(mem))
+    print("  cost_analysis: flops=%.3e bytes=%.3e" % (
+        cost.get("flops", 0.0), cost.get("bytes accessed", 0.0)))
+
+    from repro.analysis.buffers import bf16_legalization_overhead
+    from repro.analysis.hlo import collective_summary
+    from repro.analysis.hlo_cost import loop_aware_cost
+
+    hlo_text = compiled.as_text()
+    coll = collective_summary(hlo_text)
+    bf16_overhead = bf16_legalization_overhead(hlo_text)
+    t0 = time.time()
+    aware = loop_aware_cost(hlo_text)
+    print("  loop-aware: flops=%.3e bytes=%.3e ici=%.3e (%.1fs)" % (
+        aware["flops"], aware["bytes"], aware["ici_bytes"],
+        time.time() - t0))
+
+    rec = {
+        "arch": arch_id, "shape": shape_name, "mesh": mesh_name,
+        "status": "ok",
+        "kind": cell.kind,
+        "lower_s": round(t_lower, 2),
+        "compile_s": round(t_compile, 2),
+        "memory": _mem_dict(mem),
+        "bf16_legalization_overhead_bytes": int(bf16_overhead),
+        "cost": {k: v for k, v in cost.items()
+                 if isinstance(v, (int, float)) and abs(v) > 0},
+        "loop_aware_cost": aware,
+        "collectives": coll,
+        "param_count": spec.config.param_count,
+        "active_param_count": spec.config.active_param_count,
+    }
+    _write(rec, out_dir)
+    return rec
+
+
+def _mem_dict(mem) -> dict:
+    return {
+        "argument_bytes": int(mem.argument_size_in_bytes),
+        "output_bytes": int(mem.output_size_in_bytes),
+        "temp_bytes": int(mem.temp_size_in_bytes),
+        "generated_code_bytes": int(mem.generated_code_size_in_bytes),
+        "alias_bytes": int(mem.alias_size_in_bytes),
+    }
+
+
+def _write(rec: dict, out_dir: Path) -> None:
+    out_dir.mkdir(parents=True, exist_ok=True)
+    name = f"{rec['arch']}__{rec['shape']}__{rec['mesh']}.json"
+    (out_dir / name).write_text(json.dumps(rec, indent=2))
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--arch", choices=list_archs())
+    ap.add_argument("--shape", choices=sorted(SHAPES))
+    ap.add_argument("--mesh", choices=["pod", "multipod", "both"],
+                    default="pod")
+    ap.add_argument("--all", action="store_true",
+                    help="every (arch x shape) cell")
+    ap.add_argument("--out", type=Path, default=OUT_DIR)
+    args = ap.parse_args(argv)
+
+    assert jax.device_count() == 512, (
+        "dry-run requires the 512-device XLA host platform flag"
+    )
+    meshes = ["pod", "multipod"] if args.mesh == "both" else [args.mesh]
+    if args.all:
+        cells = [(a, s) for a in list_archs() for s in SHAPES]
+    else:
+        if not (args.arch and args.shape):
+            ap.error("--arch/--shape required unless --all")
+        cells = [(args.arch, args.shape)]
+
+    failures = []
+    for arch_id, shape_name in cells:
+        for mesh_name in meshes:
+            try:
+                run_cell(arch_id, shape_name, mesh_name, args.out)
+            except Exception:
+                failures.append((arch_id, shape_name, mesh_name))
+                traceback.print_exc()
+            finally:
+                jax.clear_caches()  # bound host RAM across 80 cells
+    if failures:
+        print("FAILED cells:", failures)
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,26 @@
+"""Production meshes.  A FUNCTION, not a module constant — importing
+this module never touches jax device state (the dry-run must set
+XLA_FLAGS before the first device query)."""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """16x16 = 256 chips/pod ("data","model"); 2 pods = 512 chips with a
+    leading "pod" axis.  DP runs over ("pod","data"); TP over "model"."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(
+        shape, axes,
+        axis_types=(jax.sharding.AxisType.Auto,) * len(axes),
+    )
+
+
+def make_host_mesh():
+    """Whatever this host exposes, as a 1D ("data",) mesh — used by the
+    runnable examples and smoke tests."""
+    n = jax.device_count()
+    return jax.make_mesh(
+        (n,), ("data",), axis_types=(jax.sharding.AxisType.Auto,)
+    )

@@ -1,0 +1,221 @@
+"""Assemble jitted, sharded step functions for an (arch x shape x mesh)
+cell.  Shared by the dry-run, the trainer, and the server.
+
+Everything here works on ShapeDtypeStruct stand-ins (``abstract=True``
+paths allocate nothing) — the paper's "collect the trace once, predict
+every configuration" discipline applied to XLA: one lowering per cell,
+analyzed offline.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec
+
+from repro.configs.base import ArchSpec, Shape
+from repro.dist.sharding import (
+    ShardingRules, param_shardings, pspec_for, use_sharding,
+)
+from repro.models.layers import unzip_params
+from repro.train.optimizer import Optimizer, adafactor, adamw
+from repro.train.schedule import warmup_cosine
+from repro.train.train_step import TrainState, build_train_step, init_state
+
+
+def build_rules(mesh: Mesh, spec: ArchSpec, kind: str) -> ShardingRules:
+    return ShardingRules(mesh, spec.rules_for(kind))
+
+
+def make_optimizer(spec: ArchSpec, total_steps: int = 10000) -> Optimizer:
+    sched = warmup_cosine(spec.peak_lr, min(500, total_steps // 10 + 1),
+                          total_steps)
+    if spec.optimizer_name == "adafactor":
+        return adafactor(sched)
+    return adamw(sched)
+
+
+def abstract_params(spec: ArchSpec):
+    """(abstract value tree, logical-axes tree) — no allocation."""
+    pspec_tree = jax.eval_shape(
+        lambda k: spec.family.init(k, spec.config), jax.random.key(0)
+    )
+    return unzip_params(pspec_tree)
+
+
+def _tree_shardings(abstract, axes, rules):
+    shardings, _ = param_shardings(abstract, axes, rules)
+    return shardings
+
+
+def batch_shardings(spec: ArchSpec, shape: Shape, rules: ShardingRules):
+    specs = spec.input_specs(shape)
+    axes = spec.batch_axes(shape)
+    return {
+        name: NamedSharding(
+            rules.mesh, pspec_for(specs[name].shape, axes[name], rules)
+        )
+        for name in specs
+    }
+
+
+@dataclasses.dataclass
+class CellArtifacts:
+    """Everything needed to lower/compile/run one cell."""
+    kind: str
+    fn: Callable                 # the pure step function
+    in_shardings: Any
+    out_shardings: Any
+    abstract_args: tuple         # ShapeDtypeStructs for .lower()
+    donate_argnums: tuple
+    rules: ShardingRules
+
+
+# --- train --------------------------------------------------------------------
+
+
+def build_train_cell(spec: ArchSpec, shape: Shape, mesh: Mesh,
+                     *, grad_accum: int | None = None) -> CellArtifacts:
+    rules = build_rules(mesh, spec, "train")
+    cfg = spec.config
+    fam = spec.family
+    optimizer = make_optimizer(spec)
+    accum = spec.grad_accum_for(shape) if grad_accum is None else grad_accum
+    # the microbatch batch dim must stay divisible by the DP extent or
+    # GSPMD replicates activations (observed: 289 GB/chip on multipod)
+    dp = rules.axis_size(rules.dp_axes)
+    while accum > 1 and (shape.global_batch % accum
+                         or (shape.global_batch // accum) % dp):
+        accum -= 1
+
+    def loss(p, b):
+        return fam.loss_fn(p, b, cfg)
+
+    step_fn = build_train_step(
+        loss, optimizer, grad_accum=accum, accum_dtype=spec.accum_dtype
+    )
+
+    aparams, paxes = abstract_params(spec)
+    aopt = jax.eval_shape(optimizer.init, aparams)
+    oaxes = optimizer.state_axes(paxes)
+    astate = TrainState(jax.ShapeDtypeStruct((), jnp.int32), aparams, aopt)
+
+    opt_rules = rules.with_overrides(**spec.opt_rules) if spec.opt_rules \
+        else rules
+    state_sh = TrainState(
+        NamedSharding(mesh, PartitionSpec()),
+        _tree_shardings(aparams, paxes, rules),
+        _tree_shardings(aopt, oaxes, opt_rules),
+    )
+    batch_sh = batch_shardings(spec, shape, rules)
+    metrics_sh = {
+        k: NamedSharding(mesh, PartitionSpec())
+        for k in ("loss", "grad_norm", "param_norm")
+    }
+
+    def traced(state, batch):
+        with use_sharding(rules):
+            return step_fn(state, batch)
+
+    return CellArtifacts(
+        kind="train",
+        fn=traced,
+        in_shardings=(state_sh, batch_sh),
+        out_shardings=(state_sh, metrics_sh),
+        abstract_args=(astate, spec.input_specs(shape)),
+        donate_argnums=(0,),
+        rules=rules,
+    )
+
+
+# --- serve --------------------------------------------------------------------
+
+
+def abstract_caches(spec: ArchSpec, shape: Shape):
+    fam = spec.family
+    kw = spec.cache_kwargs(shape)
+    acaches = jax.eval_shape(lambda: fam.init_caches(spec.config, **kw))
+    axes = fam.cache_axes(spec.config)
+    return acaches, axes
+
+
+def build_prefill_cell(spec: ArchSpec, shape: Shape, mesh: Mesh) -> CellArtifacts:
+    rules = build_rules(mesh, spec, "prefill")
+    cfg, fam = spec.config, spec.family
+
+    acaches, caxes = abstract_caches(spec, shape)
+    aparams, paxes = abstract_params(spec)
+    cache_sh = _tree_shardings(acaches, caxes, rules)
+    param_sh = _tree_shardings(aparams, paxes, rules)
+    batch_sh = batch_shardings(spec, shape, rules)
+    logits_sh = NamedSharding(
+        mesh, pspec_for((shape.global_batch, spec.config.padded_vocab),
+                        ("act_batch", "act_vocab"), rules)
+    )
+
+    def traced(params, batch, caches):
+        with use_sharding(rules):
+            return fam.prefill(params, batch, cfg, caches)
+
+    return CellArtifacts(
+        kind="prefill",
+        fn=traced,
+        in_shardings=(param_sh, batch_sh, cache_sh),
+        out_shardings=(logits_sh, cache_sh),
+        abstract_args=(aparams, spec.input_specs(shape), acaches),
+        donate_argnums=(2,),
+        rules=rules,
+    )
+
+
+def build_decode_cell(spec: ArchSpec, shape: Shape, mesh: Mesh) -> CellArtifacts:
+    rules = build_rules(mesh, spec, "decode")
+    cfg, fam = spec.config, spec.family
+
+    acaches, caxes = abstract_caches(spec, shape)
+    aparams, paxes = abstract_params(spec)
+    cache_sh = _tree_shardings(acaches, caxes, rules)
+    param_sh = _tree_shardings(aparams, paxes, rules)
+    batch_sh = batch_shardings(spec, shape, rules)
+    repl = NamedSharding(mesh, PartitionSpec())
+    logits_sh = NamedSharding(
+        mesh, pspec_for((shape.global_batch, spec.config.padded_vocab),
+                        ("act_batch", "act_vocab"), rules)
+    )
+
+    def traced(params, batch, caches, length):
+        with use_sharding(rules):
+            return fam.decode_step(params, batch, cfg, caches, length)
+
+    alength = jax.ShapeDtypeStruct((), jnp.int32)
+    return CellArtifacts(
+        kind="decode",
+        fn=traced,
+        in_shardings=(param_sh, batch_sh, cache_sh, repl),
+        out_shardings=(logits_sh, cache_sh),
+        abstract_args=(aparams, spec.input_specs(shape), acaches, alength),
+        donate_argnums=(2,),
+        rules=rules,
+    )
+
+
+def build_cell(spec: ArchSpec, shape: Shape, mesh: Mesh) -> CellArtifacts:
+    if shape.kind == "train":
+        return build_train_cell(spec, shape, mesh)
+    if shape.kind == "prefill":
+        return build_prefill_cell(spec, shape, mesh)
+    return build_decode_cell(spec, shape, mesh)
+
+
+def lower_cell(cell: CellArtifacts):
+    """jit + .lower() — the dry-run entry point."""
+    fn = jax.jit(
+        cell.fn,
+        in_shardings=cell.in_shardings,
+        out_shardings=cell.out_shardings,
+        donate_argnums=cell.donate_argnums,
+    )
+    with cell.rules.mesh:
+        return fn.lower(*cell.abstract_args)

@@ -1,0 +1,6 @@
+"""Model substrate for the 10 assigned architectures.
+
+Pure-functional JAX: params are pytrees of arrays, each leaf paired
+with a tuple of *logical axis names* (MaxText-style) that
+``repro.dist.sharding`` maps onto the production mesh.
+"""

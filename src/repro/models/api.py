@@ -1,0 +1,143 @@
+"""Uniform family API: every architecture family exposes the same
+batch-dict interface so configs/launch/serve code is family-agnostic.
+
+    fam = get_family("transformer")
+    params = fam.init(key, cfg)
+    loss   = fam.loss_fn(params, batch, cfg)
+    caches = fam.init_caches(cfg, batch_size, max_len, **kw)
+    logits, caches = fam.prefill(params, batch, cfg, caches)
+    logits, caches = fam.decode_step(params, batch, cfg, caches, length)
+
+``cache_axes(cfg)`` returns a logical-axes tree parallel to the cache
+pytree (tuples at leaf positions) for ``repro.dist.sharding``.
+"""
+from __future__ import annotations
+
+from typing import Any, Callable, NamedTuple
+
+from repro.models import attention as attn
+from repro.models import encdec, hybrid, multimodal, ssm
+from repro.models import transformer as tfm
+
+
+class Family(NamedTuple):
+    name: str
+    init: Callable
+    loss_fn: Callable
+    init_caches: Callable
+    prefill: Callable
+    decode_step: Callable
+    cache_axes: Callable
+
+
+_KV_AXES = ("layers", "act_batch", "act_kv_seq", "act_kv_heads", None)
+
+
+def _kv_cache_axes(_cfg):
+    return attn.KVCache(k=_KV_AXES, v=_KV_AXES, length=("layers",))
+
+
+def _ssm_cache_axes(_cfg, lead=("layers",)):
+    return ssm.SSMCache(
+        conv_x=lead + ("act_batch", None, "act_mlp"),
+        conv_b=lead + ("act_batch", None, None),
+        conv_c=lead + ("act_batch", None, None),
+        state=lead + ("act_batch", "act_heads", None, None),
+        length=lead,
+    )
+
+
+def _hybrid_cache_axes(cfg: hybrid.Zamba2Config):
+    ga = ("groups", "act_batch", "act_kv_seq", "act_kv_heads", None)
+    return hybrid.HybridCache(
+        groups=_ssm_cache_axes(None, lead=("groups", "layers")),
+        trailing=_ssm_cache_axes(None) if cfg.trailing else None,
+        attn=attn.KVCache(k=ga, v=ga, length=("groups",)),
+        length=(),
+    )
+
+
+def _encdec_cache_axes(_cfg):
+    return encdec.EncDecCache(
+        self_kv=attn.KVCache(k=_KV_AXES, v=_KV_AXES, length=("layers",)),
+        cross_k=_KV_AXES,
+        cross_v=_KV_AXES,
+        length=(),
+    )
+
+
+TRANSFORMER = Family(
+    name="transformer",
+    init=tfm.init,
+    loss_fn=tfm.loss_fn,
+    init_caches=tfm.init_caches,
+    prefill=lambda p, batch, cfg, caches: tfm.prefill(
+        p, batch["tokens"], cfg, caches
+    ),
+    decode_step=lambda p, batch, cfg, caches, length: tfm.decode_step(
+        p, batch["token"], cfg, caches, length
+    ),
+    cache_axes=_kv_cache_axes,
+)
+
+SSM = Family(
+    name="ssm",
+    init=ssm.init,
+    loss_fn=ssm.loss_fn,
+    init_caches=ssm.init_caches,
+    prefill=lambda p, batch, cfg, caches: ssm.prefill(
+        p, batch["tokens"], cfg, caches
+    ),
+    decode_step=lambda p, batch, cfg, caches, length: ssm.decode_step(
+        p, batch["token"], cfg, caches, length
+    ),
+    cache_axes=_ssm_cache_axes,
+)
+
+HYBRID = Family(
+    name="hybrid",
+    init=hybrid.init,
+    loss_fn=hybrid.loss_fn,
+    init_caches=hybrid.init_caches,
+    prefill=lambda p, batch, cfg, caches: hybrid.prefill(
+        p, batch["tokens"], cfg, caches
+    ),
+    decode_step=lambda p, batch, cfg, caches, length: hybrid.decode_step(
+        p, batch["token"], cfg, caches, length
+    ),
+    cache_axes=_hybrid_cache_axes,
+)
+
+ENCDEC = Family(
+    name="encdec",
+    init=encdec.init,
+    loss_fn=encdec.loss_fn,
+    init_caches=encdec.init_caches,
+    prefill=lambda p, batch, cfg, caches: encdec.prefill(
+        p, batch["frames"], batch["tokens"], cfg, caches
+    ),
+    decode_step=lambda p, batch, cfg, caches, length: encdec.decode_step(
+        p, batch["token"], cfg, caches, length
+    ),
+    cache_axes=_encdec_cache_axes,
+)
+
+VLM = Family(
+    name="vlm",
+    init=multimodal.init,
+    loss_fn=multimodal.loss_fn,
+    init_caches=multimodal.init_caches,
+    prefill=lambda p, batch, cfg, caches: multimodal.prefill(
+        p, batch["patches"], batch["tokens"], cfg, caches
+    ),
+    decode_step=lambda p, batch, cfg, caches, length: multimodal.decode_step(
+        p, batch["token"], cfg, caches, length
+    ),
+    cache_axes=lambda cfg: _kv_cache_axes(cfg.backbone),
+)
+
+FAMILIES = {f.name: f for f in (TRANSFORMER, SSM, HYBRID, ENCDEC, VLM)}
+
+
+def get_family(name: str) -> Family:
+    return FAMILIES[name]

@@ -1,0 +1,269 @@
+"""GQA attention: train/prefill (causal), decode (KV cache), cross-attn,
+optional sliding window (mixtral), optional sequence-parallel mode.
+
+Sharding layouts (logical axes; see repro.dist.sharding):
+
+* head-TP (default): q/k/v heads sharded over "model"; KV heads are
+  repeated up to the query head count *after* sharding so each chip
+  only materializes its own head group (GQA repeat is local).
+* sequence-parallel (``sp=True`` — archs whose 56 heads don't divide
+  the 16-way model axis): queries are sharded over the sequence dim,
+  K/V all-gathered; scores stay seq-sharded.
+* decode: the KV cache is sharded over its *sequence* dim on "model"
+  (probe-verified: dynamic_update_slice on a seq-sharded cache lowers
+  with zero all-gathers); softmax over the sharded key axis costs two
+  small all-reduces.
+
+The pure-jnp paths here are what the CPU dry-run lowers; the Pallas
+flash kernel replaces the blocked path on real TPUs (``use_pallas``).
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.dist.sharding import shard
+from repro.models.layers import PSpec, apply_rope, fan_in_normal
+
+NEG_INF = -1e30
+
+
+class KVCache(NamedTuple):
+    """Append cache: [batch, max_len, kv_heads, head_dim]."""
+
+    k: jnp.ndarray
+    v: jnp.ndarray
+    length: jnp.ndarray  # scalar int32 — tokens currently valid
+
+
+def attn_init(
+    key,
+    d_model: int,
+    num_heads: int,
+    num_kv_heads: int,
+    head_dim: int,
+    dtype=jnp.float32,
+):
+    kq, kk, kv, ko = jax.random.split(key, 4)
+    return {
+        "wq": PSpec(
+            fan_in_normal(kq, (d_model, num_heads, head_dim), d_model, dtype),
+            ("embed", "heads", "head_dim"),
+        ),
+        "wk": PSpec(
+            fan_in_normal(kk, (d_model, num_kv_heads, head_dim), d_model, dtype),
+            ("embed", "kv_heads", "head_dim"),
+        ),
+        "wv": PSpec(
+            fan_in_normal(kv, (d_model, num_kv_heads, head_dim), d_model, dtype),
+            ("embed", "kv_heads", "head_dim"),
+        ),
+        "wo": PSpec(
+            fan_in_normal(ko, (num_heads, head_dim, d_model),
+                          num_heads * head_dim, dtype),
+            ("heads", "head_dim", "embed"),
+        ),
+    }
+
+
+def _repeat_kv(k: jnp.ndarray, num_heads: int) -> jnp.ndarray:
+    """[B,S,Hkv,hd] -> [B,S,H,hd]; local per shard under head-TP."""
+    hkv = k.shape[2]
+    if hkv == num_heads:
+        return k
+    return jnp.repeat(k, num_heads // hkv, axis=2)
+
+
+def _mask(q_pos, kv_pos, kv_valid, causal, window):
+    """[B,1,Sq,Sk] boolean attention mask from absolute positions."""
+    m = kv_valid[:, None, None, :]
+    if causal:
+        m = m & (kv_pos[:, None, None, :] <= q_pos[:, None, :, None])
+    if window is not None:
+        m = m & (kv_pos[:, None, None, :] > q_pos[:, None, :, None] - window)
+    return m
+
+
+def _sdpa_dense(q, k, v, *, q_positions, kv_positions, kv_valid, causal, window):
+    """Materialized-scores attention.  q:[B,Sq,H,hd] k/v:[B,Sk,H,hd].
+
+    Inputs stay bf16 with fp32 *accumulation* via preferred_element_type
+    — the MXU-native semantics.  Never ``astype(f32)`` the K/V cache:
+    XLA hoists that convert out of the layer scan and materializes an
+    f32 copy of the entire stacked cache (observed: +16 GB/chip)."""
+    scale = q.shape[-1] ** -0.5
+    scores = jnp.einsum(
+        "bqhd,bkhd->bhqk", q, k, preferred_element_type=jnp.float32
+    ) * scale
+    m = _mask(q_positions, kv_positions, kv_valid, causal, window)
+    scores = jnp.where(m, scores, NEG_INF)
+    probs = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bhqk,bkhd->bqhd", probs.astype(v.dtype), v,
+                     preferred_element_type=jnp.float32)
+    return out.astype(q.dtype)
+
+
+def _sdpa_blocked(
+    q, k, v, *, q_positions, kv_positions, kv_valid, causal, window,
+    block_q: int,
+):
+    """lax.scan over query blocks — bounds peak scores memory at
+    [B,H,block_q,Sk] (the flash-attention memory shape, fwd only).
+
+    With a sliding window, each q block only attends to a static-width
+    key band [q_start - window, q_start + block_q), so HLO FLOPs are
+    O(S·(window+block_q)) rather than O(S²)."""
+    b, sq, h, hd = q.shape
+    sk = k.shape[1]
+    nb = sq // block_q
+    qb = q.reshape(b, nb, block_q, h, hd).transpose(1, 0, 2, 3, 4)
+    qp = q_positions.reshape(b, nb, block_q).transpose(1, 0, 2)
+
+    banded = window is not None and sq == sk and window + block_q < sk
+    band = (window + block_q) if banded else sk
+
+    def body(i, blk):
+        qi, qpi = blk
+        if banded:
+            start = jnp.maximum(i * block_q - window, 0)
+            ki = jax.lax.dynamic_slice_in_dim(k, start, band, axis=1)
+            vi = jax.lax.dynamic_slice_in_dim(v, start, band, axis=1)
+            kpi = jax.lax.dynamic_slice_in_dim(kv_positions, start, band, axis=1)
+            kvi = jax.lax.dynamic_slice_in_dim(kv_valid, start, band, axis=1)
+        else:
+            ki, vi, kpi, kvi = k, v, kv_positions, kv_valid
+        out = _sdpa_dense(
+            qi, ki, vi, q_positions=qpi, kv_positions=kpi, kv_valid=kvi,
+            causal=causal, window=window,
+        )
+        return i + 1, out
+
+    _, outs = jax.lax.scan(body, 0, (qb, qp))
+    return outs.transpose(1, 0, 2, 3, 4).reshape(b, sq, h, hd)
+
+
+def sdpa(
+    q, k, v, *, q_positions, kv_positions, kv_valid, causal, window=None,
+    block_q: int = 1024, impl: str = "blocked",
+):
+    """Dispatch between dense and q-blocked attention (full-head layout)."""
+    if impl == "dense" or q.shape[1] <= block_q or q.shape[1] % block_q:
+        return _sdpa_dense(
+            q, k, v, q_positions=q_positions, kv_positions=kv_positions,
+            kv_valid=kv_valid, causal=causal, window=window,
+        )
+    return _sdpa_blocked(
+        q, k, v, q_positions=q_positions, kv_positions=kv_positions,
+        kv_valid=kv_valid, causal=causal, window=window, block_q=block_q,
+    )
+
+
+def gqa_attention(
+    params,
+    x: jnp.ndarray,                  # [B, S, D]
+    *,
+    positions: jnp.ndarray,          # [B, S]
+    rope_theta: float,
+    causal: bool = True,
+    window: int | None = None,
+    cache: KVCache | None = None,
+    kv_override: tuple[jnp.ndarray, jnp.ndarray] | None = None,
+    kv_positions: jnp.ndarray | None = None,
+    sp: bool = False,
+    attn_impl: str = "blocked",
+    block_q: int = 1024,
+) -> tuple[jnp.ndarray, KVCache | None]:
+    """Full GQA attention.
+
+    * train/prefill: ``cache=None`` — keys/values from ``x`` itself.
+    * decode: ``cache`` holds past KV; ``x`` is the new token(s); the
+      cache is updated at ``cache.length`` and returned.
+    * cross-attention: ``kv_override=(k_src, v_src)`` (already projected
+      encoder memory) — no cache update, no causal mask.
+    """
+    h = params["wq"].shape[1]
+    # SP (seq-sharded dense scores) is the *training* memory fix for
+    # non-divisible head counts; with a cache (prefill/decode) there are
+    # no saved activations, so q-blocked attention with unsharded seq is
+    # both legal and far smaller (SP-dense at 32k prefill would
+    # materialize a 30 GB/chip score tensor).
+    sp = sp and cache is None and kv_override is None
+    seq_ax = "act_sp_seq" if sp else "act_seq"
+    q = jnp.einsum("bsd,dhk->bshk", x, params["wq"])
+    q = apply_rope(q, positions, rope_theta)
+    q = shard(q, "act_batch", seq_ax, "act_heads", None)
+    impl = "dense" if sp else attn_impl
+
+    if kv_override is not None:
+        k, v = kv_override
+        if kv_positions is None:
+            kv_positions = jnp.broadcast_to(
+                jnp.arange(k.shape[1], dtype=jnp.int32)[None], k.shape[:2]
+            )
+        kv_valid = jnp.ones(k.shape[:2], bool)
+        out = sdpa(q, _repeat_kv(k, h), _repeat_kv(v, h),
+                   q_positions=positions, kv_positions=kv_positions,
+                   kv_valid=kv_valid, causal=False, window=None,
+                   impl=impl, block_q=block_q)
+        new_cache = None
+    else:
+        k = jnp.einsum("bsd,dhk->bshk", x, params["wk"])
+        v = jnp.einsum("bsd,dhk->bshk", x, params["wv"])
+        k = apply_rope(k, positions, rope_theta)
+        k = shard(k, "act_batch", None, "act_kv_heads", None)
+        v = shard(v, "act_batch", None, "act_kv_heads", None)
+        if cache is None:
+            kv_valid = jnp.ones(k.shape[:2], bool)
+            out = sdpa(q, _repeat_kv(k, h), _repeat_kv(v, h),
+                       q_positions=positions, kv_positions=positions,
+                       kv_valid=kv_valid, causal=causal, window=window,
+                       impl=impl, block_q=block_q)
+            new_cache = None
+        else:
+            # decode/prefill-into-cache: append new token(s) at
+            # cache.length.  dynamic_update_slice on the seq-sharded
+            # cache keeps HBM traffic at O(new tokens).
+            b, s_new = positions.shape
+            max_len = cache.k.shape[1]
+            k_cache = jax.lax.dynamic_update_slice_in_dim(
+                cache.k, k.astype(cache.k.dtype), cache.length, axis=1
+            )
+            v_cache = jax.lax.dynamic_update_slice_in_dim(
+                cache.v, v.astype(cache.v.dtype), cache.length, axis=1
+            )
+            k_cache = shard(k_cache, "act_batch", "act_kv_seq",
+                            "act_kv_heads", None)
+            v_cache = shard(v_cache, "act_batch", "act_kv_seq",
+                            "act_kv_heads", None)
+            new_len = cache.length + s_new
+            kv_pos = jnp.broadcast_to(
+                jnp.arange(max_len, dtype=jnp.int32)[None], (b, max_len)
+            )
+            kv_valid = kv_pos < new_len
+            out = sdpa(q, _repeat_kv(k_cache, h), _repeat_kv(v_cache, h),
+                       q_positions=positions, kv_positions=kv_pos,
+                       kv_valid=kv_valid, causal=causal, window=window,
+                       impl=impl, block_q=block_q)
+            new_cache = KVCache(k_cache, v_cache, new_len)
+
+    y = jnp.einsum("bshk,hkd->bsd", out, params["wo"])
+    return y, new_cache
+
+
+def project_kv(params, memory: jnp.ndarray) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Encoder-memory K/V for cross-attention (computed once per sequence)."""
+    k = jnp.einsum("bsd,dhk->bshk", memory, params["wk"])
+    v = jnp.einsum("bsd,dhk->bshk", memory, params["wv"])
+    return k, v
+
+
+def init_kv_cache(
+    batch: int, max_len: int, kv_heads: int, head_dim: int, dtype
+) -> KVCache:
+    return KVCache(
+        k=jnp.zeros((batch, max_len, kv_heads, head_dim), dtype),
+        v=jnp.zeros((batch, max_len, kv_heads, head_dim), dtype),
+        length=jnp.zeros((), jnp.int32),
+    )

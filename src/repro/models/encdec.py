@@ -1,0 +1,239 @@
+"""Encoder–decoder backbone (seamless-m4t).  The audio/text modality
+frontend is a STUB per the brief: ``input_specs()`` provides precomputed
+frame embeddings [B, S_src, D]; this module implements the transformer
+backbone (bidirectional encoder + causal decoder with cross-attention).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.dist.sharding import shard
+from repro.models import attention as attn
+from repro.models import layers as L
+
+
+@dataclasses.dataclass(frozen=True)
+class EncDecConfig:
+    enc_layers: int
+    dec_layers: int
+    d_model: int
+    heads: int
+    kv_heads: int
+    d_ff: int
+    vocab: int
+    head_dim: int = 64
+    rope_theta: float = 10000.0
+    dtype: Any = jnp.bfloat16
+    vocab_pad_multiple: int = 128
+    attn_impl: str = "blocked"
+    block_q: int = 1024
+    remat: bool = True
+    scan_layers: bool = True
+    norm_eps: float = 1e-6
+    zloss: float = 1e-4
+
+    @property
+    def padded_vocab(self) -> int:
+        m = self.vocab_pad_multiple
+        return -(-self.vocab // m) * m
+
+    @property
+    def param_count(self) -> int:
+        d, f, hd = self.d_model, self.d_ff, self.head_dim
+        qkvo = d * (self.heads + 2 * self.kv_heads) * hd + self.heads * hd * d
+        enc = self.enc_layers * (qkvo + 3 * d * f + 2 * d)
+        dec = self.dec_layers * (2 * qkvo + 3 * d * f + 3 * d)
+        return enc + dec + 2 * self.padded_vocab * d + 2 * d
+
+    active_param_count = param_count
+
+
+class EncDecCache(NamedTuple):
+    self_kv: attn.KVCache            # [Ld, B, max_len, kv, hd]
+    cross_k: jnp.ndarray             # [Ld, B, S_src, kv, hd]
+    cross_v: jnp.ndarray
+    length: jnp.ndarray
+
+
+def _enc_block_init(key, cfg):
+    ka, km = jax.random.split(key)
+    return {
+        "ln_attn": L.rmsnorm_init(cfg.d_model, cfg.dtype),
+        "attn": attn.attn_init(ka, cfg.d_model, cfg.heads, cfg.kv_heads,
+                               cfg.head_dim, cfg.dtype),
+        "ln_mlp": L.rmsnorm_init(cfg.d_model, cfg.dtype),
+        "mlp": L.mlp_init(km, cfg.d_model, cfg.d_ff, cfg.dtype),
+    }
+
+
+def _dec_block_init(key, cfg):
+    ka, kx, km = jax.random.split(key, 3)
+    p = _enc_block_init(jax.random.fold_in(key, 0), cfg)
+    p["ln_cross"] = L.rmsnorm_init(cfg.d_model, cfg.dtype)
+    p["cross"] = attn.attn_init(kx, cfg.d_model, cfg.heads, cfg.kv_heads,
+                                cfg.head_dim, cfg.dtype)
+    return p
+
+
+def init(key, cfg: EncDecConfig):
+    from repro.models.transformer import stack_layer_params
+
+    ke, kd, kv, ku = jax.random.split(key, 4)
+    enc = stack_layer_params(jax.vmap(lambda k: _enc_block_init(k, cfg))(
+        jax.random.split(ke, cfg.enc_layers)))
+    dec = stack_layer_params(jax.vmap(lambda k: _dec_block_init(k, cfg))(
+        jax.random.split(kd, cfg.dec_layers)))
+    return {
+        "embed": L.embed_init(kv, cfg.padded_vocab, cfg.d_model, cfg.dtype),
+        "encoder": enc,
+        "enc_norm": L.rmsnorm_init(cfg.d_model, cfg.dtype),
+        "decoder": dec,
+        "dec_norm": L.rmsnorm_init(cfg.d_model, cfg.dtype),
+        "unembed": L.linear_init(ku, cfg.d_model, cfg.padded_vocab,
+                                 ("embed", "vocab"), cfg.dtype),
+    }
+
+
+def _maybe_remat(cfg, fn):
+    if cfg.remat:
+        return jax.checkpoint(fn, policy=jax.checkpoint_policies.nothing_saveable)
+    return fn
+
+
+def encode(params, frames: jnp.ndarray, cfg: EncDecConfig) -> jnp.ndarray:
+    """frames: [B, S_src, D] precomputed modality embeddings -> memory."""
+    b, s, _ = frames.shape
+    positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32)[None], (b, s))
+    x = shard(frames.astype(cfg.dtype), "act_batch", "act_seq", "act_embed")
+
+    def body(xc, lp):
+        h = L.rmsnorm(lp["ln_attn"], xc, cfg.norm_eps)
+        a, _ = attn.gqa_attention(
+            lp["attn"], h, positions=positions, rope_theta=cfg.rope_theta,
+            causal=False, attn_impl=cfg.attn_impl, block_q=cfg.block_q,
+        )
+        xc = xc + a
+        m = L.mlp(lp["mlp"], L.rmsnorm(lp["ln_mlp"], xc, cfg.norm_eps))
+        return xc + shard(m, "act_batch", "act_seq", "act_embed"), None
+
+    x, _ = jax.lax.scan(_maybe_remat(cfg, body), x, params["encoder"])
+    return L.rmsnorm(params["enc_norm"], x, cfg.norm_eps)
+
+
+def _dec_block(cfg, lp, x, *, positions, cross_kv, self_cache):
+    h = L.rmsnorm(lp["ln_attn"], x, cfg.norm_eps)
+    a, new_cache = attn.gqa_attention(
+        lp["attn"], h, positions=positions, rope_theta=cfg.rope_theta,
+        causal=True, cache=self_cache, attn_impl=cfg.attn_impl,
+        block_q=cfg.block_q,
+    )
+    x = x + a
+    h = L.rmsnorm(lp["ln_cross"], x, cfg.norm_eps)
+    c, _ = attn.gqa_attention(
+        lp["cross"], h, positions=positions, rope_theta=cfg.rope_theta,
+        causal=False, kv_override=cross_kv, attn_impl=cfg.attn_impl,
+        block_q=cfg.block_q,
+    )
+    x = x + c
+    m = L.mlp(lp["mlp"], L.rmsnorm(lp["ln_mlp"], x, cfg.norm_eps))
+    return x + shard(m, "act_batch", "act_seq", "act_embed"), new_cache
+
+
+def decode_stack(params, tokens, memory, cfg: EncDecConfig, *,
+                 caches: EncDecCache | None = None, positions=None):
+    """memory: [B, S_src, D] (ignored when cross-KV comes from caches)."""
+    b, s = tokens.shape
+    if positions is None:
+        base = caches.length if caches is not None else 0
+        positions = jnp.broadcast_to(
+            base + jnp.arange(s, dtype=jnp.int32)[None], (b, s)
+        ).astype(jnp.int32)
+    x = L.embed(params["embed"], tokens).astype(cfg.dtype)
+    x = shard(x, "act_batch", "act_seq", "act_embed")
+
+    def body(xc, layer):
+        lp, self_c, ck, cv = layer
+        if self_c is not None:
+            self_c = jax.lax.optimization_barrier(self_c)
+        if ck is None:
+            cross_kv = attn.project_kv(lp["cross"], memory)
+        else:
+            cross_kv = jax.lax.optimization_barrier((ck, cv))
+        xc, new_cache = _dec_block(cfg, lp, xc, positions=positions,
+                                   cross_kv=cross_kv, self_cache=self_c)
+        return xc, new_cache
+
+    self_caches = caches.self_kv if caches is not None else None
+    ck = caches.cross_k if caches is not None else None
+    cv = caches.cross_v if caches is not None else None
+    x, new_self = jax.lax.scan(
+        _maybe_remat(cfg, body), x, (params["decoder"], self_caches, ck, cv)
+    )
+    x = L.rmsnorm(params["dec_norm"], x, cfg.norm_eps)
+    logits = L.linear(params["unembed"], x)
+    logits = shard(logits, "act_batch", "act_seq", "act_vocab")
+    if cfg.padded_vocab != cfg.vocab:
+        pad = jnp.arange(cfg.padded_vocab) >= cfg.vocab
+        logits = jnp.where(pad, jnp.asarray(-1e30, logits.dtype), logits)
+    new_caches = None
+    if caches is not None:
+        new_caches = EncDecCache(new_self, caches.cross_k, caches.cross_v,
+                                 caches.length + s)
+    return logits, new_caches
+
+
+def loss_fn(params, batch, cfg: EncDecConfig):
+    """batch: {"frames": [B,Ss,D], "tokens": [B,St], "labels": [B,St]}."""
+    from repro.models.transformer import softmax_xent
+
+    memory = encode(params, batch["frames"], cfg)
+    logits, _ = decode_stack(params, batch["tokens"], memory, cfg)
+    return softmax_xent(logits, batch["labels"], cfg.zloss)
+
+
+def project_cross_kv(params, memory, cfg: EncDecConfig):
+    """Per-layer cross K/V from encoder memory (computed once)."""
+    def one(lp):
+        return attn.project_kv(lp["cross"], memory)
+
+    ks, vs = jax.lax.map(one, params["decoder"])
+    return ks, vs
+
+
+def init_caches(cfg: EncDecConfig, batch: int, max_len: int, src_len: int):
+    return EncDecCache(
+        self_kv=attn.KVCache(
+            k=jnp.zeros((cfg.dec_layers, batch, max_len, cfg.kv_heads,
+                         cfg.head_dim), cfg.dtype),
+            v=jnp.zeros((cfg.dec_layers, batch, max_len, cfg.kv_heads,
+                         cfg.head_dim), cfg.dtype),
+            length=jnp.zeros((cfg.dec_layers,), jnp.int32),
+        ),
+        cross_k=jnp.zeros((cfg.dec_layers, batch, src_len, cfg.kv_heads,
+                           cfg.head_dim), cfg.dtype),
+        cross_v=jnp.zeros((cfg.dec_layers, batch, src_len, cfg.kv_heads,
+                           cfg.head_dim), cfg.dtype),
+        length=jnp.zeros((), jnp.int32),
+    )
+
+
+def prefill(params, frames, tokens, cfg: EncDecConfig, caches: EncDecCache):
+    """Encode the source and prefill the decoder self-cache."""
+    memory = encode(params, frames, cfg)
+    ck, cv = project_cross_kv(params, memory, cfg)
+    caches = caches._replace(cross_k=ck.astype(cfg.dtype),
+                             cross_v=cv.astype(cfg.dtype))
+    logits, caches = decode_stack(params, tokens, None, cfg, caches=caches)
+    return logits[:, -1, :], caches
+
+
+def decode_step(params, token, cfg: EncDecConfig, caches: EncDecCache, length):
+    b = token.shape[0]
+    positions = jnp.broadcast_to(length[None, None], (b, 1)).astype(jnp.int32)
+    logits, caches = decode_stack(params, token, None, cfg, caches=caches,
+                                  positions=positions)
+    return logits[:, -1, :], caches

@@ -1,0 +1,254 @@
+"""Zamba2-style hybrid: Mamba2 backbone + one *shared* attention block.
+
+The single shared transformer block (one set of weights) is applied
+every ``attn_every`` Mamba2 layers; its input is a learned projection
+of concat(hidden, original embedding) — the Zamba2 "global memory"
+pattern.  Weights are shared across applications; KV caches are not
+(one cache per application site).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.dist.sharding import shard
+from repro.models import attention as attn
+from repro.models import layers as L
+from repro.models import ssm
+from repro.models.layers import PSpec, fan_in_normal
+
+
+@dataclasses.dataclass(frozen=True)
+class Zamba2Config:
+    layers: int
+    d_model: int
+    vocab: int
+    heads: int = 32
+    kv_heads: int = 32
+    d_ff: int = 8192
+    ssm_state: int = 64
+    head_dim: int = 64
+    expand: int = 2
+    conv_width: int = 4
+    chunk: int = 128
+    attn_every: int = 6
+    rope_theta: float = 10000.0
+    dtype: Any = jnp.bfloat16
+    vocab_pad_multiple: int = 128
+    tie_embeddings: bool = True
+    attn_impl: str = "blocked"
+    block_q: int = 1024
+    remat: bool = True
+    scan_layers: bool = True
+    norm_eps: float = 1e-6
+    zloss: float = 1e-4
+
+    @property
+    def num_groups(self) -> int:
+        return self.layers // self.attn_every
+
+    @property
+    def trailing(self) -> int:
+        return self.layers - self.num_groups * self.attn_every
+
+    def mamba_cfg(self) -> ssm.Mamba2Config:
+        return ssm.Mamba2Config(
+            layers=self.layers, d_model=self.d_model, vocab=self.vocab,
+            ssm_state=self.ssm_state, head_dim=self.head_dim,
+            expand=self.expand, conv_width=self.conv_width, chunk=self.chunk,
+            dtype=self.dtype, vocab_pad_multiple=self.vocab_pad_multiple,
+            tie_embeddings=self.tie_embeddings, remat=self.remat,
+            scan_layers=self.scan_layers, norm_eps=self.norm_eps,
+            zloss=self.zloss,
+        )
+
+    @property
+    def padded_vocab(self) -> int:
+        m = self.vocab_pad_multiple
+        return -(-self.vocab // m) * m
+
+    @property
+    def param_count(self) -> int:
+        d, hd = self.d_model, self.head_dim
+        mcfg = self.mamba_cfg()
+        per_mamba = (mcfg.param_count - self.padded_vocab * d - d) // self.layers
+        shared = (
+            2 * d * d                                   # w_cat
+            + d * (self.heads + 2 * self.kv_heads) * hd
+            + self.heads * hd * d
+            + 3 * d * self.d_ff + 3 * d
+        )
+        emb = self.padded_vocab * d * (1 if self.tie_embeddings else 2)
+        return self.layers * per_mamba + shared + emb + d
+
+    active_param_count = param_count
+
+
+class HybridCache(NamedTuple):
+    groups: ssm.SSMCache        # [G, P, ...] per-group mamba states
+    trailing: ssm.SSMCache | None   # [T, ...]
+    attn: attn.KVCache          # [G, B, max_len, kv, hd]
+    length: jnp.ndarray
+
+
+def init(key, cfg: Zamba2Config):
+    from repro.models.transformer import stack_layer_params
+
+    ke, kg, kt, ka, kc = jax.random.split(key, 5)
+    mcfg = cfg.mamba_cfg()
+    g, p, t = cfg.num_groups, cfg.attn_every, cfg.trailing
+
+    flat_keys = jax.random.split(kg, g * p)
+    gkeys = flat_keys.reshape((g, p) + flat_keys.shape[1:])
+    group_blocks = stack_layer_params(stack_layer_params(
+        jax.vmap(jax.vmap(lambda k: ssm.block_init(k, mcfg)))(gkeys)
+    ))
+    params = {
+        "embed": L.embed_init(ke, cfg.padded_vocab, cfg.d_model, cfg.dtype),
+        "groups": group_blocks,
+        "shared": {
+            "w_cat": PSpec(
+                fan_in_normal(kc, (2 * cfg.d_model, cfg.d_model),
+                              2 * cfg.d_model, cfg.dtype),
+                ("embed", None),
+            ),
+            "ln_attn": L.rmsnorm_init(cfg.d_model, cfg.dtype),
+            "attn": attn.attn_init(ka, cfg.d_model, cfg.heads, cfg.kv_heads,
+                                   cfg.head_dim, cfg.dtype),
+            "ln_mlp": L.rmsnorm_init(cfg.d_model, cfg.dtype),
+            "mlp": L.mlp_init(ka, cfg.d_model, cfg.d_ff, cfg.dtype),
+        },
+        "final_norm": L.rmsnorm_init(cfg.d_model, cfg.dtype),
+    }
+    if t:
+        tkeys = jax.random.split(kt, t)
+        params["trailing"] = stack_layer_params(
+            jax.vmap(lambda k: ssm.block_init(k, mcfg))(tkeys)
+        )
+    if not cfg.tie_embeddings:
+        params["unembed"] = L.linear_init(
+            key, cfg.d_model, cfg.padded_vocab, ("embed", "vocab"), cfg.dtype
+        )
+    return params
+
+
+def _shared_attn(cfg, sp, x, x0, positions, kv_cache):
+    """One application of the shared global block."""
+    cat = jnp.concatenate([x, x0], axis=-1)
+    h = jnp.einsum("bsd,dk->bsk", cat, sp["w_cat"])
+    h = L.rmsnorm(sp["ln_attn"], h, cfg.norm_eps)
+    a, new_cache = attn.gqa_attention(
+        sp["attn"], h, positions=positions, rope_theta=cfg.rope_theta,
+        causal=True, cache=kv_cache, attn_impl=cfg.attn_impl,
+        block_q=cfg.block_q,
+    )
+    x = x + a
+    m = L.mlp(sp["mlp"], L.rmsnorm(sp["ln_mlp"], x, cfg.norm_eps))
+    return x + shard(m, "act_batch", "act_seq", "act_embed"), new_cache
+
+
+def forward(params, tokens, cfg: Zamba2Config, *, caches: HybridCache | None = None,
+            positions=None):
+    mcfg = cfg.mamba_cfg()
+    x = L.embed(params["embed"], tokens).astype(cfg.dtype)
+    x0 = x
+    b, s, _ = x.shape
+    if positions is None:
+        base = caches.length if caches is not None else 0
+        positions = jnp.broadcast_to(
+            base + jnp.arange(s, dtype=jnp.int32)[None], (b, s)
+        ).astype(jnp.int32)
+    x = shard(x, "act_batch", "act_seq", "act_embed")
+
+    def mamba_body(xc, layer):
+        lp, cache = layer
+        if cache is not None:
+            cache = jax.lax.optimization_barrier(cache)
+        xc, nc = ssm.block_apply(mcfg, lp, xc, cache=cache)
+        return xc, nc
+
+    mamba_fn = (
+        jax.checkpoint(mamba_body, policy=jax.checkpoint_policies.nothing_saveable)
+        if cfg.remat else mamba_body
+    )
+
+    def group_body(xc, grp):
+        gp, gcache, acache = grp
+        xc, new_attn = _shared_attn(cfg, params["shared"], xc, x0,
+                                    positions, acache)
+        xc, new_g = jax.lax.scan(mamba_fn, xc, (gp, gcache))
+        return xc, (new_g, new_attn)
+
+    gcaches = caches.groups if caches is not None else None
+    acaches = caches.attn if caches is not None else None
+    x, (new_groups, new_attn) = jax.lax.scan(
+        group_body, x, (params["groups"], gcaches, acaches)
+    )
+
+    new_trailing = None
+    if cfg.trailing:
+        tcaches = caches.trailing if caches is not None else None
+        x, new_trailing = jax.lax.scan(
+            mamba_fn, x, (params["trailing"], tcaches)
+        )
+
+    x = L.rmsnorm(params["final_norm"], x, cfg.norm_eps)
+    logits = ssm._logits(params, x, cfg)
+    new_caches = None
+    if caches is not None:
+        new_caches = HybridCache(new_groups, new_trailing, new_attn,
+                                 caches.length + s)
+    return logits, new_caches
+
+
+def loss_fn(params, batch, cfg: Zamba2Config):
+    from repro.models.transformer import softmax_xent
+
+    logits, _ = forward(params, batch["tokens"], cfg)
+    return softmax_xent(logits, batch["labels"], cfg.zloss)
+
+
+def init_caches(cfg: Zamba2Config, batch: int, max_len: int):
+    mcfg = cfg.mamba_cfg()
+    g, p, t = cfg.num_groups, cfg.attn_every, cfg.trailing
+
+    def ssm_caches(n_outer, n_inner=None):
+        shape = (n_outer,) if n_inner is None else (n_outer, n_inner)
+        w, di, n = cfg.conv_width, mcfg.d_inner, cfg.ssm_state
+        return ssm.SSMCache(
+            conv_x=jnp.zeros((*shape, batch, w - 1, di), cfg.dtype),
+            conv_b=jnp.zeros((*shape, batch, w - 1, n), cfg.dtype),
+            conv_c=jnp.zeros((*shape, batch, w - 1, n), cfg.dtype),
+            state=jnp.zeros((*shape, batch, mcfg.heads, n, cfg.head_dim),
+                            jnp.float32),
+            length=jnp.zeros(shape, jnp.int32),
+        )
+
+    return HybridCache(
+        groups=ssm_caches(g, p),
+        trailing=ssm_caches(t) if t else None,
+        attn=attn.KVCache(
+            k=jnp.zeros((g, batch, max_len, cfg.kv_heads, cfg.head_dim),
+                        cfg.dtype),
+            v=jnp.zeros((g, batch, max_len, cfg.kv_heads, cfg.head_dim),
+                        cfg.dtype),
+            length=jnp.zeros((g,), jnp.int32),
+        ),
+        length=jnp.zeros((), jnp.int32),
+    )
+
+
+def prefill(params, tokens, cfg: Zamba2Config, caches):
+    logits, caches = forward(params, tokens, cfg, caches=caches)
+    return logits[:, -1, :], caches
+
+
+def decode_step(params, token, cfg: Zamba2Config, caches, length):
+    b = token.shape[0]
+    positions = jnp.broadcast_to(length[None, None], (b, 1)).astype(jnp.int32)
+    logits, caches = forward(params, token, cfg, caches=caches,
+                             positions=positions)
+    return logits[:, -1, :], caches

@@ -1,0 +1,113 @@
+"""Capacity-based top-k MoE (mixtral / arctic) — GShard-style grouped dispatch.
+
+Dispatch/combine are one-hot einsums over [group, tokens, experts,
+capacity] masks, evaluated per token *group* so the mask cost stays at
+``g·k·cf/(6·d_ff)`` of the expert FLOPs (<5% at g=1024).  Expert
+parallelism falls out of the sharding rules: arctic shards ``experts``
+over "model" (true EP — dispatch lowers to all-to-all style
+collectives), mixtral keeps its 8 experts replicated and shards the
+expert FFN dim over "model" (TP-MoE) since 8 < 16 devices.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.dist.sharding import shard
+from repro.models.layers import PSpec, fan_in_normal
+
+
+@dataclasses.dataclass(frozen=True)
+class MoEConfig:
+    num_experts: int
+    top_k: int = 2
+    capacity_factor: float = 1.25
+    aux_loss_weight: float = 0.01
+    tokens_per_group: int = 1024
+
+
+def moe_init(key, d: int, d_ff: int, cfg: MoEConfig, dtype=jnp.float32):
+    kr, ki, kg, ko = jax.random.split(key, 4)
+    e = cfg.num_experts
+    return {
+        "router": PSpec(
+            fan_in_normal(kr, (d, e), d, jnp.float32), ("embed", "experts")
+        ),
+        "wi": PSpec(
+            fan_in_normal(ki, (e, d, d_ff), d, dtype), ("experts", "embed", "mlp")
+        ),
+        "wg": PSpec(
+            fan_in_normal(kg, (e, d, d_ff), d, dtype), ("experts", "embed", "mlp")
+        ),
+        "wo": PSpec(
+            fan_in_normal(ko, (e, d_ff, d), d_ff, dtype), ("experts", "mlp", "embed")
+        ),
+    }
+
+
+def _capacity(group_tokens: int, cfg: MoEConfig) -> int:
+    c = int(group_tokens * cfg.top_k * cfg.capacity_factor / cfg.num_experts)
+    return max(4, -(-c // 4) * 4)  # round up to a multiple of 4, floor 4
+
+
+def moe_apply(params, x: jnp.ndarray, cfg: MoEConfig):
+    """x: [B, S, D] -> (y, aux_loss).
+
+    Top-k routing with per-expert, per-group capacity; overflowing
+    tokens are dropped (Switch/GShard semantics).  Aux load-balance loss
+    follows Switch Transformer eq. 4.
+    """
+    b, s, d = x.shape
+    t = b * s
+    e, k = cfg.num_experts, cfg.top_k
+    g_tok = min(cfg.tokens_per_group, t)
+    while t % g_tok:
+        g_tok -= 1  # largest divisor <= tokens_per_group
+    n_groups = t // g_tok
+    cap = _capacity(g_tok, cfg)
+
+    xt = shard(x.reshape(n_groups, g_tok, d), "act_batch", None, None)
+    logits = jnp.einsum("gtd,de->gte", xt, params["router"],
+                        preferred_element_type=jnp.float32)
+    probs = jax.nn.softmax(logits, axis=-1)                      # [G, t, E]
+    gate, idx = jax.lax.top_k(probs, k)                          # [G, t, k]
+    gate = gate / jnp.sum(gate, axis=-1, keepdims=True)
+
+    onehot = jax.nn.one_hot(idx, e, dtype=jnp.float32)           # [G, t, k, E]
+    # position of each (token, choice) in its expert buffer; choice-major
+    # cumsum so first choices win capacity slots.
+    flat = onehot.transpose(0, 2, 1, 3).reshape(n_groups, k * g_tok, e)
+    pos_flat = jnp.cumsum(flat, axis=1) - flat
+    pos = pos_flat.reshape(n_groups, k, g_tok, e).transpose(0, 2, 1, 3)
+    keep = (pos < cap) * onehot                                  # [G, t, k, E]
+    pos_idx = jnp.sum(pos * keep, axis=-1).astype(jnp.int32)     # [G, t, k]
+    pos_oh = jax.nn.one_hot(pos_idx, cap, dtype=jnp.float32)     # [G, t, k, C]
+
+    # dispatch/combine masks in model dtype with fp32 accumulation —
+    # f32 [G,t,E,C] masks would be the layer's largest tensors
+    dispatch = jnp.einsum("gtke,gtkc->gtec", keep, pos_oh).astype(x.dtype)
+    combine = jnp.einsum(
+        "gtke,gtk,gtkc->gtec", keep, gate, pos_oh
+    ).astype(x.dtype)
+
+    # the group dim stays batch(dp)-sharded — constraining it to None
+    # would force a full all-gather of the dispatched activations
+    # (observed: 40 GB/chip on mixtral prefill)
+    xe = jnp.einsum("gtd,gtec->gecd", xt, dispatch,
+                    preferred_element_type=jnp.float32)
+    xe = shard(xe.astype(x.dtype), "act_batch", "act_experts", None, None)
+    h = jnp.einsum("gecd,edf->gecf", xe, params["wi"])
+    gte = jnp.einsum("gecd,edf->gecf", xe, params["wg"])
+    h = jax.nn.silu(gte) * h
+    h = shard(h, "act_batch", "act_experts", None, "act_mlp")
+    ye = jnp.einsum("gecf,efd->gecd", h, params["wo"])
+    y = jnp.einsum("gecd,gtec->gtd", ye, combine,
+                   preferred_element_type=jnp.float32)
+
+    # Switch aux loss: E * sum_e fraction_routed_e * mean_router_prob_e
+    frac = jnp.mean(onehot[:, :, 0, :], axis=(0, 1))             # top-1 routing
+    mean_prob = jnp.mean(probs, axis=(0, 1))
+    aux = cfg.aux_loss_weight * e * jnp.sum(frac * mean_prob)
+    return y.reshape(b, s, d).astype(x.dtype), aux

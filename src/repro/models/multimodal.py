@@ -1,0 +1,71 @@
+"""VLM wrapper (phi-3-vision).  The CLIP frontend is a STUB per the
+brief: ``input_specs()`` provides precomputed patch embeddings
+[B, P, clip_dim]; this module owns the projection into the backbone
+embedding space and delegates everything else to the phi-3 transformer
+backbone (image prefix tokens + causal text, loss on text positions).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers as L
+from repro.models import transformer as tfm
+
+
+@dataclasses.dataclass(frozen=True)
+class VLMConfig:
+    backbone: tfm.TransformerConfig
+    clip_dim: int = 1024
+    num_patches: int = 1024
+
+    @property
+    def param_count(self) -> int:
+        return self.backbone.param_count + self.clip_dim * self.backbone.d_model
+
+    active_param_count = param_count
+
+    @property
+    def padded_vocab(self) -> int:
+        return self.backbone.padded_vocab
+
+
+def init(key, cfg: VLMConfig):
+    kb, kp = jax.random.split(key)
+    return {
+        "backbone": tfm.init(kb, cfg.backbone),
+        "patch_proj": L.linear_init(
+            kp, cfg.clip_dim, cfg.backbone.d_model, ("embed", None),
+            cfg.backbone.dtype,
+        ),
+    }
+
+
+def _project(params, patches):
+    return L.linear(params["patch_proj"], patches)
+
+
+def loss_fn(params, batch, cfg: VLMConfig):
+    """batch: {"patches": [B,P,clip_dim], "tokens": [B,S_text],
+    "labels": [B,S_text]} — loss on text positions only."""
+    prefix = _project(params, batch["patches"])
+    b = dict(batch)
+    b["patch_embeds"] = prefix
+    return tfm.loss_fn(params["backbone"], b, cfg.backbone)
+
+
+def init_caches(cfg: VLMConfig, batch: int, max_len: int):
+    return tfm.init_caches(cfg.backbone, batch, max_len)
+
+
+def prefill(params, patches, tokens, cfg: VLMConfig, caches):
+    prefix = _project(params, patches)
+    return tfm.prefill(params["backbone"], tokens, cfg.backbone, caches,
+                       prefix_embeds=prefix)
+
+
+def decode_step(params, token, cfg: VLMConfig, caches, length):
+    return tfm.decode_step(params["backbone"], token, cfg.backbone, caches,
+                           length)

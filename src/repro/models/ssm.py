@@ -1,0 +1,358 @@
+"""Mamba2 (SSD — state-space duality) blocks and the mamba2 LM stack.
+
+Full-sequence path uses the *chunked* SSD decomposition (intra-chunk
+quadratic attention-like matmuls + inter-chunk state scan) — the
+matmul-heavy formulation the paper's SSD kernel targets, MXU-friendly
+and O(S·Q) rather than O(S²).  Decode carries a constant-size recurrent
+state, which is why ``long_500k`` runs for this family.
+
+The depthwise causal conv is applied *separately* to x/B/C streams
+(mathematically identical to the fused grouped conv, but keeps every
+stream's channel dim cleanly shardable over "model").
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.dist.sharding import shard
+from repro.models import layers as L
+from repro.models.layers import PSpec, fan_in_normal
+
+
+@dataclasses.dataclass(frozen=True)
+class Mamba2Config:
+    layers: int
+    d_model: int
+    vocab: int
+    ssm_state: int = 128            # N
+    head_dim: int = 64              # P
+    expand: int = 2
+    conv_width: int = 4
+    chunk: int = 128
+    dtype: Any = jnp.bfloat16
+    vocab_pad_multiple: int = 128
+    tie_embeddings: bool = True
+    remat: bool = True
+    scan_layers: bool = True
+    norm_eps: float = 1e-6
+    zloss: float = 1e-4
+
+    @property
+    def d_inner(self) -> int:
+        return self.expand * self.d_model
+
+    @property
+    def heads(self) -> int:
+        return self.d_inner // self.head_dim
+
+    @property
+    def padded_vocab(self) -> int:
+        m = self.vocab_pad_multiple
+        return -(-self.vocab // m) * m
+
+    @property
+    def param_count(self) -> int:
+        d, di, n, h = self.d_model, self.d_inner, self.ssm_state, self.heads
+        per_layer = (
+            d * (2 * di + 2 * n + h)        # wz, wx, wB, wC, wdt
+            + self.conv_width * (di + 2 * n)
+            + 3 * h + di + di * d + d       # A_log/D/dt_bias, ln_gate, wo, ln
+        )
+        emb = self.padded_vocab * d * (1 if self.tie_embeddings else 2)
+        return self.layers * per_layer + emb + d
+
+    active_param_count = param_count
+
+
+class SSMCache(NamedTuple):
+    """Constant-size decode state per layer (stacked [L, ...] in the LM)."""
+
+    conv_x: jnp.ndarray   # [B, W-1, di]
+    conv_b: jnp.ndarray   # [B, W-1, N]
+    conv_c: jnp.ndarray   # [B, W-1, N]
+    state: jnp.ndarray    # [B, H, N, P] fp32
+    length: jnp.ndarray   # scalar int32
+
+
+# --- block params -------------------------------------------------------------
+
+
+def block_init(key, cfg: Mamba2Config):
+    kz, kx, kb, kc, kd, ko = jax.random.split(key, 6)
+    d, di, n, h, w = (cfg.d_model, cfg.d_inner, cfg.ssm_state, cfg.heads,
+                      cfg.conv_width)
+    return {
+        "ln": L.rmsnorm_init(d, cfg.dtype),
+        "wz": PSpec(fan_in_normal(kz, (d, di), d, cfg.dtype), ("embed", "inner")),
+        "wx": PSpec(fan_in_normal(kx, (d, di), d, cfg.dtype), ("embed", "inner")),
+        "wB": PSpec(fan_in_normal(kb, (d, n), d, cfg.dtype), ("embed", "ssm_state")),
+        "wC": PSpec(fan_in_normal(kc, (d, n), d, cfg.dtype), ("embed", "ssm_state")),
+        "wdt": PSpec(fan_in_normal(kd, (d, h), d, jnp.float32), ("embed", "ssm_heads")),
+        "conv_x": PSpec(jnp.full((w, di), 1.0 / w, cfg.dtype), (None, "inner")),
+        "conv_b": PSpec(jnp.full((w, n), 1.0 / w, cfg.dtype), (None, "ssm_state")),
+        "conv_c": PSpec(jnp.full((w, n), 1.0 / w, cfg.dtype), (None, "ssm_state")),
+        "A_log": PSpec(jnp.zeros((h,), jnp.float32), ("ssm_heads",)),
+        "D": PSpec(jnp.ones((h,), jnp.float32), ("ssm_heads",)),
+        "dt_bias": PSpec(jnp.full((h,), -2.0, jnp.float32), ("ssm_heads",)),
+        "ln_gate": L.rmsnorm_init(di, cfg.dtype),
+        "wo": PSpec(fan_in_normal(ko, (di, d), di, cfg.dtype), ("inner", "embed")),
+    }
+
+
+# --- causal depthwise conv ----------------------------------------------------
+
+
+def causal_conv(x: jnp.ndarray, kernel: jnp.ndarray,
+                tail: jnp.ndarray | None = None):
+    """x: [B, S, C]; kernel: [W, C].  ``tail`` [B, W-1, C] is the decode
+    conv state (pre-activation inputs preceding x); zeros when None.
+    Returns (y [B, S, C], new_tail [B, W-1, C]).
+
+    Implemented as ONE depthwise ``lax.conv``: the W-tap shifted-add
+    formulation materialized ~5 stream-sized tensors per call (§Perf
+    mamba2 iter3 measured 340 GB/step of pad/mul/concat traffic)."""
+    b, s, c = x.shape
+    w = kernel.shape[0]
+    if tail is None:
+        tail = jnp.zeros((b, w - 1, c), x.dtype)
+    if s == 1:
+        # decode: explicit dot with the tail is cheaper than a conv op
+        xp = jnp.concatenate([tail, x], axis=1)        # [B, W, C]
+        y = jnp.einsum("bwc,wc->bc", xp, kernel)[:, None, :]
+        return y.astype(x.dtype), xp[:, -(w - 1):, :] if w > 1 else tail
+    xp = jnp.concatenate([tail, x], axis=1)            # [B, S+W-1, C]
+    y = jax.lax.conv_general_dilated(
+        xp, kernel[:, None, :].astype(x.dtype),        # [W, 1, C]
+        window_strides=(1,), padding="VALID",
+        dimension_numbers=("NWC", "WIO", "NWC"),
+        feature_group_count=c,
+    )
+    new_tail = xp[:, -(w - 1):, :] if w > 1 else tail
+    return y.astype(x.dtype), new_tail
+
+
+# --- chunked SSD --------------------------------------------------------------
+
+
+def ssd_chunked(xh, la, b, c, chunk: int, state0=None):
+    """Chunked SSD.  xh: [B,S,H,P]; la: [B,S,H] (log decay); b,c: [B,S,N].
+    Returns (y [B,S,H,P], final_state [B,H,N,P])."""
+    bsz, s, h, p = xh.shape
+    n = b.shape[-1]
+    cdt = xh.dtype if xh.dtype == jnp.bfloat16 else jnp.float32
+    q = min(chunk, s)
+    while s % q:
+        q -= 1
+    nc = s // q
+    xh = xh.reshape(bsz, nc, q, h, p).astype(cdt)
+    la = la.reshape(bsz, nc, q, h).astype(jnp.float32)
+    bm = b.reshape(bsz, nc, q, n).astype(cdt)
+    cm = c.reshape(bsz, nc, q, n).astype(cdt)
+
+    lc = jnp.cumsum(la, axis=2)                        # [B,Nc,Q,H] inclusive
+    lc = shard(lc, "act_batch", None, None, "act_heads")
+    lsum = lc[:, :, -1, :]                             # [B,Nc,H]
+
+    # intra-chunk: y[q] += sum_{s<=q} exp(lc[q]-lc[s]) (c_q.b_s) x[s]
+    g = jnp.einsum("bnqN,bnsN->bnqs", cm, bm,
+                   preferred_element_type=jnp.float32)  # [B,Nc,Q,Q]
+    diff = lc[:, :, :, None, :] - lc[:, :, None, :, :]  # [B,Nc,Q,S,H]
+    mask = jnp.tril(jnp.ones((q, q), bool))
+    # mask the exponent (not the product) so the masked side never
+    # overflows exp and never poisons gradients with inf*0
+    diff = jnp.where(mask[None, None, :, :, None], diff, -1e30)
+    # the [B,Nc,Q,Q,H] decay matrix is THE memory hot spot of chunked
+    # SSD: keep it head-sharded and in compute dtype, accumulate fp32
+    m = (g[..., None] * jnp.exp(diff)).astype(cdt)
+    m = shard(m, "act_batch", None, None, None, "act_heads")
+    y_intra = jnp.einsum("bnqsh,bnshp->bnqhp", m, xh,
+                         preferred_element_type=jnp.float32)
+
+    # chunk-boundary states: h_n = sum_s exp(lsum - lc[s]) b_s (x) x_s
+    w = jnp.exp(lsum[:, :, None, :] - lc).astype(cdt)  # [B,Nc,Q,H]
+    h_chunk = jnp.einsum("bnqh,bnqN,bnqhp->bnhNp", w, bm, xh,
+                         preferred_element_type=jnp.float32)
+
+    # inter-chunk scan: state entering chunk n
+    if state0 is None:
+        state0 = jnp.zeros((bsz, h, n, p), jnp.float32)
+
+    def step(state, inp):
+        hc, ls = inp                                   # [B,H,N,P], [B,H]
+        prior = state
+        state = jnp.exp(ls)[:, :, None, None] * state + hc
+        return state, prior
+
+    final, priors = jax.lax.scan(
+        step, state0,
+        (h_chunk.transpose(1, 0, 2, 3, 4), lsum.transpose(1, 0, 2)),
+    )
+    priors = priors.transpose(1, 0, 2, 3, 4)           # [B,Nc,H,N,P]
+    y_inter = jnp.einsum(
+        "bnqN,bnhNp,bnqh->bnqhp", cm, priors, jnp.exp(lc)
+    )
+    y = (y_intra + y_inter).reshape(bsz, s, h, p)
+    return y.astype(jnp.float32), final
+
+
+# --- block apply --------------------------------------------------------------
+
+
+def block_apply(cfg: Mamba2Config, params, x, *, cache: SSMCache | None):
+    """Pre-norm Mamba2 block; returns (x, new_cache)."""
+    x = shard(x, "act_batch", "act_seq", "act_embed")
+    hin = L.rmsnorm(params["ln"], x, cfg.norm_eps)
+
+    z = jnp.einsum("bsd,di->bsi", hin, params["wz"])
+    xs = jnp.einsum("bsd,di->bsi", hin, params["wx"])
+    bb = jnp.einsum("bsd,dn->bsn", hin, params["wB"])
+    cc = jnp.einsum("bsd,dn->bsn", hin, params["wC"])
+    dt = jax.nn.softplus(
+        jnp.einsum("bsd,dh->bsh", hin, params["wdt"].astype(hin.dtype),
+                   preferred_element_type=jnp.float32)
+        + params["dt_bias"]
+    )                                                   # [B,S,H]
+
+    tails = (cache.conv_x, cache.conv_b, cache.conv_c) if cache else (None,) * 3
+    xs, tail_x = causal_conv(xs, params["conv_x"], tails[0])
+    bb, tail_b = causal_conv(bb, params["conv_b"], tails[1])
+    cc, tail_c = causal_conv(cc, params["conv_c"], tails[2])
+    xs, bb, cc = jax.nn.silu(xs), jax.nn.silu(bb), jax.nn.silu(cc)
+    xs = shard(xs, "act_batch", "act_seq", "act_mlp")
+
+    bsz, s, _ = xs.shape
+    h, p = cfg.heads, cfg.head_dim
+    xh = xs.reshape(bsz, s, h, p)
+    xh = shard(xh, "act_batch", "act_seq", "act_heads", None)
+    la = -jnp.exp(params["A_log"]) * dt                 # [B,S,H] log decay
+    xin = xh.astype(jnp.float32) * dt[..., None]
+
+    state0 = cache.state if cache is not None else None
+    if cache is not None and s == 1:
+        # single-step recurrence (decode)
+        lat = la[:, 0, :]                               # [B,H]
+        hb = jnp.einsum("bN,bhp->bhNp", bb[:, 0].astype(jnp.float32),
+                        xin[:, 0])
+        state = jnp.exp(lat)[:, :, None, None] * cache.state + hb
+        y = jnp.einsum("bN,bhNp->bhp", cc[:, 0].astype(jnp.float32), state)
+        y = y[:, None]                                  # [B,1,H,P]
+        final = state
+    else:
+        y, final = ssd_chunked(xin, la, bb, cc, cfg.chunk, state0)
+    final = shard(final, "act_batch", "act_heads", None, None)
+
+    y = y + params["D"][None, None, :, None] * xh.astype(jnp.float32)
+    y = y.reshape(bsz, s, cfg.d_inner).astype(x.dtype)
+    y = L.rmsnorm(params["ln_gate"], y * jax.nn.silu(z), cfg.norm_eps)
+    out = jnp.einsum("bsi,id->bsd", y, params["wo"])
+    out = shard(out, "act_batch", "act_seq", "act_embed")
+
+    new_cache = None
+    if cache is not None:
+        new_cache = SSMCache(tail_x, tail_b, tail_c, final,
+                             cache.length + s)
+    return x + out, new_cache
+
+
+# --- LM stack -----------------------------------------------------------------
+
+
+def init(key, cfg: Mamba2Config):
+    ke, kb, ku = jax.random.split(key, 3)
+    from repro.models.transformer import stack_layer_params
+
+    block_keys = jax.random.split(kb, cfg.layers)
+    blocks = stack_layer_params(
+        jax.vmap(lambda k: block_init(k, cfg))(block_keys)
+    )
+    params = {
+        "embed": L.embed_init(ke, cfg.padded_vocab, cfg.d_model, cfg.dtype),
+        "blocks": blocks,
+        "final_norm": L.rmsnorm_init(cfg.d_model, cfg.dtype),
+    }
+    if not cfg.tie_embeddings:
+        params["unembed"] = L.linear_init(
+            ku, cfg.d_model, cfg.padded_vocab, ("embed", "vocab"), cfg.dtype
+        )
+    return params
+
+
+def _logits(params, x, cfg):
+    if cfg.tie_embeddings:
+        logits = L.unembed(params["embed"], x)
+    else:
+        logits = L.linear(params["unembed"], x)
+    logits = shard(logits, "act_batch", "act_seq", "act_vocab")
+    if cfg.padded_vocab != cfg.vocab:
+        pad = jnp.arange(cfg.padded_vocab) >= cfg.vocab
+        logits = jnp.where(pad, jnp.asarray(-1e30, logits.dtype), logits)
+    return logits
+
+
+def forward(params, tokens, cfg: Mamba2Config, *, caches=None):
+    x = L.embed(params["embed"], tokens).astype(cfg.dtype)
+    x = shard(x, "act_batch", "act_seq", "act_embed")
+
+    def body(carry, layer):
+        lp, cache = layer
+        if cache is not None:
+            cache = jax.lax.optimization_barrier(cache)
+        xc, new_cache = block_apply(cfg, lp, carry, cache=cache)
+        return xc, new_cache
+
+    body_fn = body
+    if cfg.remat:
+        body_fn = jax.checkpoint(
+            body, policy=jax.checkpoint_policies.nothing_saveable
+        )
+    if cfg.scan_layers:
+        x, new_caches = jax.lax.scan(body_fn, x, (params["blocks"], caches))
+    else:
+        outs = []
+        for i in range(cfg.layers):
+            lp = jax.tree.map(lambda a: a[i], params["blocks"])
+            cc = None if caches is None else jax.tree.map(lambda a: a[i], caches)
+            x, nc = body_fn(x, (lp, cc))
+            outs.append(nc)
+        new_caches = (
+            None if caches is None
+            else jax.tree.map(lambda *xs: jnp.stack(xs), *outs)
+        )
+    x = L.rmsnorm(params["final_norm"], x, cfg.norm_eps)
+    return _logits(params, x, cfg), new_caches
+
+
+def loss_fn(params, batch, cfg: Mamba2Config):
+    from repro.models.transformer import softmax_xent
+
+    logits, _ = forward(params, batch["tokens"], cfg)
+    return softmax_xent(logits, batch["labels"], cfg.zloss)
+
+
+def init_caches(cfg: Mamba2Config, batch: int, max_len: int = 0):
+    """Stacked [L, ...] SSM caches; ``max_len`` is ignored (O(1) state —
+    the reason long_500k runs for this family)."""
+    w, di, n = cfg.conv_width, cfg.d_inner, cfg.ssm_state
+    return SSMCache(
+        conv_x=jnp.zeros((cfg.layers, batch, w - 1, di), cfg.dtype),
+        conv_b=jnp.zeros((cfg.layers, batch, w - 1, n), cfg.dtype),
+        conv_c=jnp.zeros((cfg.layers, batch, w - 1, n), cfg.dtype),
+        state=jnp.zeros((cfg.layers, batch, cfg.heads, n, cfg.head_dim),
+                        jnp.float32),
+        length=jnp.zeros((cfg.layers,), jnp.int32),
+    )
+
+
+def prefill(params, tokens, cfg: Mamba2Config, caches):
+    logits, caches = forward(params, tokens, cfg, caches=caches)
+    return logits[:, -1, :], caches
+
+
+def decode_step(params, token, cfg: Mamba2Config, caches, length):
+    del length  # SSM state is position-free
+    logits, caches = forward(params, token, cfg, caches=caches)
+    return logits[:, -1, :], caches

@@ -1,0 +1,10 @@
+from repro.runtime.checkpoint import (
+    CheckpointManager, save_checkpoint, restore_checkpoint,
+)
+from repro.runtime.elastic import plan_remesh
+from repro.runtime.straggler import StragglerMonitor
+
+__all__ = [
+    "CheckpointManager", "save_checkpoint", "restore_checkpoint",
+    "plan_remesh", "StragglerMonitor",
+]

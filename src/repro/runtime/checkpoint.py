@@ -1,0 +1,187 @@
+"""Sharded checkpoint/restart with elastic re-sharding.
+
+Layout: one ``.npy`` per pytree leaf + ``manifest.json`` holding the
+step, tree structure, and each leaf's *logical* sharding axes.  Restore
+maps logical axes onto ANY mesh (elastic scaling: a 512-chip checkpoint
+restores onto 256 chips or 1 host) — the mesh is a property of the
+run, not the checkpoint.
+
+Writes are atomic (tmp dir + rename) and optionally async (background
+thread); ``keep`` bounds disk usage.  On a real cluster each host
+writes only its addressable shards — the manifest format is unchanged,
+only the writer loop differs (documented in DESIGN.md §8).
+"""
+from __future__ import annotations
+
+import json
+import re
+import shutil
+import threading
+from pathlib import Path
+from typing import Any
+
+import jax
+import numpy as np
+
+from repro.dist.sharding import ShardingRules, pspec_for
+
+
+def _sanitize(keystr: str) -> str:
+    return re.sub(r"[^A-Za-z0-9_.-]+", "_", keystr).strip("_") or "leaf"
+
+
+def _flatten_with_names(tree):
+    flat, treedef = jax.tree_util.tree_flatten_with_path(tree)
+    names, leaves = [], []
+    seen: dict[str, int] = {}
+    for path, leaf in flat:
+        name = _sanitize(jax.tree_util.keystr(path))
+        if name in seen:
+            seen[name] += 1
+            name = f"{name}__{seen[name]}"
+        else:
+            seen[name] = 0
+        names.append(name)
+        leaves.append(leaf)
+    return names, leaves, treedef
+
+
+def save_checkpoint(directory: str | Path, step: int, state: Any,
+                    axes_tree: Any = None) -> Path:
+    """Write ``state`` under ``directory/step_<n>`` atomically."""
+    directory = Path(directory)
+    final = directory / f"step_{step:08d}"
+    tmp = directory / f".tmp_step_{step:08d}"
+    if tmp.exists():
+        shutil.rmtree(tmp)
+    tmp.mkdir(parents=True)
+
+    names, leaves, treedef = _flatten_with_names(state)
+    if axes_tree is not None:
+        # flatten *up to* the state's structure: logical-axes leaves are
+        # tuples of strings and must not be descended into
+        axes_leaves = treedef.flatten_up_to(axes_tree)
+    else:
+        axes_leaves = [None] * len(leaves)
+
+    manifest = {"step": int(step), "leaves": []}
+    for name, leaf, axes in zip(names, leaves, axes_leaves):
+        arr = np.asarray(jax.device_get(leaf))
+        dtype_str = str(arr.dtype)
+        if arr.dtype.kind == "V" or not arr.dtype.isbuiltin:
+            # ml_dtypes (bfloat16 etc.) don't round-trip through .npy;
+            # store as f32 (bf16 c f32 exactly), manifest keeps truth
+            arr = arr.astype(np.float32)
+        np.save(tmp / f"{name}.npy", arr, allow_pickle=False)
+        manifest["leaves"].append({
+            "name": name,
+            "dtype": dtype_str,
+            "shape": list(arr.shape),
+            "axes": list(axes) if axes is not None else None,
+        })
+    # tree structure is re-derived from the caller's abstract_state at
+    # restore (named .npy leaves make the mapping explicit)
+    (tmp / "manifest.json").write_text(json.dumps(manifest, indent=2))
+    if final.exists():
+        shutil.rmtree(final)
+    tmp.rename(final)
+    return final
+
+
+def load_manifest(ckpt_dir: str | Path) -> dict:
+    return json.loads((Path(ckpt_dir) / "manifest.json").read_text())
+
+
+def restore_checkpoint(ckpt_dir: str | Path, abstract_state: Any,
+                       rules: ShardingRules | None = None) -> Any:
+    """Restore onto the current process.  With ``rules``, every leaf is
+    device_put with the sharding its *logical* axes imply on the new
+    mesh (elastic re-shard); without, plain host arrays."""
+    ckpt_dir = Path(ckpt_dir)
+    manifest = load_manifest(ckpt_dir)
+    names, abstract_leaves, treedef = _flatten_with_names(abstract_state)
+    by_name = {e["name"]: e for e in manifest["leaves"]}
+    leaves = []
+    for name, ab in zip(names, abstract_leaves):
+        entry = by_name[name]
+        arr = np.load(ckpt_dir / f"{name}.npy", allow_pickle=False)
+        if tuple(arr.shape) != tuple(ab.shape):
+            raise ValueError(
+                f"checkpoint leaf {name}: shape {arr.shape} != expected "
+                f"{tuple(ab.shape)}"
+            )
+        if arr.dtype != ab.dtype:
+            arr = arr.astype(ab.dtype)  # f32 -> bf16 etc. (registered)
+        if rules is not None and entry["axes"] is not None:
+            sharding = jax.sharding.NamedSharding(
+                rules.mesh,
+                pspec_for(arr.shape, tuple(entry["axes"]), rules),
+            )
+            leaves.append(jax.device_put(arr.astype(ab.dtype), sharding))
+        else:
+            leaves.append(jax.device_put(arr.astype(ab.dtype)))
+    return jax.tree_util.tree_unflatten(treedef, leaves)
+
+
+class CheckpointManager:
+    """Rolling async checkpointer.
+
+    save() snapshots to host then hands the write to a background
+    thread; wait() joins.  Retains the ``keep`` newest steps."""
+
+    def __init__(self, directory: str | Path, keep: int = 3,
+                 async_write: bool = True):
+        self.directory = Path(directory)
+        self.keep = keep
+        self.async_write = async_write
+        self._thread: threading.Thread | None = None
+        self.directory.mkdir(parents=True, exist_ok=True)
+
+    def steps(self) -> list[int]:
+        return sorted(
+            int(p.name.split("_")[1])
+            for p in self.directory.glob("step_*")
+            if p.is_dir()
+        )
+
+    def latest_step(self) -> int | None:
+        s = self.steps()
+        return s[-1] if s else None
+
+    def save(self, step: int, state: Any, axes_tree: Any = None) -> None:
+        self.wait()
+        # snapshot to host synchronously (state may be donated next step)
+        host_state = jax.tree.map(lambda x: np.asarray(jax.device_get(x)),
+                                  state)
+
+        def write():
+            save_checkpoint(self.directory, step, host_state, axes_tree)
+            self._gc()
+
+        if self.async_write:
+            self._thread = threading.Thread(target=write, daemon=True)
+            self._thread.start()
+        else:
+            write()
+
+    def wait(self) -> None:
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+
+    def restore_latest(self, abstract_state: Any,
+                       rules: ShardingRules | None = None):
+        self.wait()
+        step = self.latest_step()
+        if step is None:
+            return None, None
+        state = restore_checkpoint(
+            self.directory / f"step_{step:08d}", abstract_state, rules
+        )
+        return step, state
+
+    def _gc(self) -> None:
+        steps = self.steps()
+        for s in steps[: -self.keep]:
+            shutil.rmtree(self.directory / f"step_{s:08d}",
+                          ignore_errors=True)

@@ -1,0 +1,9 @@
+from repro.train.optimizer import Optimizer, adamw, adafactor
+from repro.train.train_step import TrainState, build_train_step, init_state
+from repro.train.schedule import constant, warmup_cosine
+
+__all__ = [
+    "Optimizer", "adamw", "adafactor",
+    "TrainState", "build_train_step", "init_state",
+    "constant", "warmup_cosine",
+]

@@ -1,0 +1,140 @@
+"""Optimizers as pure pytree transforms (no external deps).
+
+* AdamW — fp32 moments, decoupled weight decay.
+* Adafactor — factored second moment; the memory-fit choice for
+  arctic-480b where AdamW's fp32 moments would exceed per-chip HBM
+  (DESIGN.md §6).
+
+Optimizer state mirrors the parameter tree leaf-for-leaf, so the
+parameters' NamedShardings map onto the state (ZeRO-style sharded
+optimizer for free — params are already FSDP-sharded over "data").
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+Schedule = Callable[[jnp.ndarray], jnp.ndarray]
+
+
+@dataclasses.dataclass(frozen=True)
+class Optimizer:
+    name: str
+    init: Callable[[Any], Any]
+    update: Callable[[Any, Any, Any, jnp.ndarray], tuple[Any, Any]]
+    # update(grads, opt_state, params, step) -> (new_params, new_state)
+    state_axes: Callable[[Any], Any] = None
+    # state_axes(param_axes_tree) -> logical-axes tree matching init()
+
+
+def _as_schedule(lr) -> Schedule:
+    return lr if callable(lr) else (lambda step: jnp.asarray(lr, jnp.float32))
+
+
+def adamw(
+    lr, b1: float = 0.9, b2: float = 0.95, eps: float = 1e-8,
+    weight_decay: float = 0.1,
+) -> Optimizer:
+    sched = _as_schedule(lr)
+
+    def init(params):
+        zeros = lambda p: jnp.zeros(p.shape, jnp.float32)
+        return {"m": jax.tree.map(zeros, params),
+                "v": jax.tree.map(zeros, params)}
+
+    def update(grads, state, params, step):
+        t = step.astype(jnp.float32) + 1.0
+        lr_t = sched(step)
+        c1 = 1.0 - b1 ** t
+        c2 = 1.0 - b2 ** t
+
+        def leaf(g, m, v, p):
+            g = g.astype(jnp.float32)
+            m = b1 * m + (1 - b1) * g
+            v = b2 * v + (1 - b2) * g * g
+            upd = (m / c1) / (jnp.sqrt(v / c2) + eps)
+            upd = upd + weight_decay * p.astype(jnp.float32)
+            return (p.astype(jnp.float32) - lr_t * upd).astype(p.dtype), m, v
+
+        out = jax.tree.map(leaf, grads, state["m"], state["v"], params)
+        new_params = jax.tree.map(lambda o: o[0], out, is_leaf=lambda x: isinstance(x, tuple))
+        new_m = jax.tree.map(lambda o: o[1], out, is_leaf=lambda x: isinstance(x, tuple))
+        new_v = jax.tree.map(lambda o: o[2], out, is_leaf=lambda x: isinstance(x, tuple))
+        return new_params, {"m": new_m, "v": new_v}
+
+    def state_axes(param_axes):
+        return {"m": param_axes, "v": param_axes}
+
+    return Optimizer("adamw", init, update, state_axes)
+
+
+def adafactor(
+    lr, decay: float = 0.8, eps: float = 1e-30, clip_threshold: float = 1.0,
+    weight_decay: float = 0.0,
+) -> Optimizer:
+    """Adafactor (Shazeer & Stern 2018), no first moment, factored second
+    moment for rank>=2 leaves: O(n+m) state instead of O(n·m)."""
+    sched = _as_schedule(lr)
+
+    def init(params):
+        def leaf(p):
+            if p.ndim >= 2:
+                return {
+                    "vr": jnp.zeros(p.shape[:-1], jnp.float32),
+                    "vc": jnp.zeros(p.shape[:-2] + p.shape[-1:], jnp.float32),
+                }
+            return {"v": jnp.zeros(p.shape, jnp.float32)}
+
+        return jax.tree.map(leaf, params)
+
+    def update(grads, state, params, step):
+        t = step.astype(jnp.float32) + 1.0
+        beta = 1.0 - t ** (-decay)
+        lr_t = sched(step)
+
+        def leaf(g, s, p):
+            g = g.astype(jnp.float32)
+            g2 = g * g + eps
+            if p.ndim >= 2:
+                vr = beta * s["vr"] + (1 - beta) * jnp.mean(g2, axis=-1)
+                vc = beta * s["vc"] + (1 - beta) * jnp.mean(g2, axis=-2)
+                denom = jnp.sqrt(
+                    vr[..., None] * vc[..., None, :]
+                    / (jnp.mean(vr, axis=-1, keepdims=True)[..., None] + eps)
+                )
+                upd = g / (denom + eps)
+                new_s = {"vr": vr, "vc": vc}
+            else:
+                v = beta * s["v"] + (1 - beta) * g2
+                upd = g / (jnp.sqrt(v) + eps)
+                new_s = {"v": v}
+            rms = jnp.sqrt(jnp.mean(upd * upd) + eps)
+            upd = upd / jnp.maximum(1.0, rms / clip_threshold)
+            if weight_decay:
+                upd = upd + weight_decay * p.astype(jnp.float32)
+            return (p.astype(jnp.float32) - lr_t * upd).astype(p.dtype), new_s
+
+        flat_p, treedef = jax.tree.flatten(params)
+        flat_g = treedef.flatten_up_to(grads)
+        flat_s = treedef.flatten_up_to(state)
+        outs = [leaf(g, s, p) for g, s, p in zip(flat_g, flat_s, flat_p)]
+        new_params = jax.tree.unflatten(treedef, [o[0] for o in outs])
+        new_state = jax.tree.unflatten(treedef, [o[1] for o in outs])
+        return new_params, new_state
+
+    def state_axes(param_axes):
+        def leaf(ax):
+            if len(ax) >= 2:
+                return {"vr": ax[:-1], "vc": ax[:-2] + ax[-1:]}
+            return {"v": ax}
+
+        return jax.tree.map(
+            leaf, param_axes,
+            is_leaf=lambda t: isinstance(t, tuple)
+            and all(isinstance(e, (str, type(None))) for e in t),
+        )
+
+    return Optimizer("adafactor", init, update, state_axes)

@@ -1,0 +1,24 @@
+"""Learning-rate schedules (traced: step -> lr)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def constant(lr: float):
+    return lambda step: jnp.asarray(lr, jnp.float32)
+
+
+def warmup_cosine(peak_lr: float, warmup_steps: int, total_steps: int,
+                  final_fraction: float = 0.1):
+    def sched(step):
+        step = step.astype(jnp.float32)
+        warm = peak_lr * (step + 1.0) / max(warmup_steps, 1)
+        frac = jnp.clip(
+            (step - warmup_steps) / max(total_steps - warmup_steps, 1), 0.0, 1.0
+        )
+        cos = final_fraction + (1 - final_fraction) * 0.5 * (
+            1 + jnp.cos(jnp.pi * frac)
+        )
+        return jnp.where(step < warmup_steps, warm, peak_lr * cos)
+
+    return sched

@@ -1,0 +1,102 @@
+"""The jitted train step: loss -> grads (with microbatch accumulation)
+-> global-norm clip -> optimizer update.
+
+Data parallelism and ZeRO sharding are *not* hand-written here: params
+are FSDP-sharded by the logical-axis rules, so GSPMD inserts the
+reduce-scatter/all-gather schedule for grads and the sharded optimizer
+update.  Gradient accumulation is a ``lax.scan`` over microbatches —
+the memory knob that keeps 95-layer training shapes inside 16 GB HBM.
+"""
+from __future__ import annotations
+
+from typing import Any, Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.train.optimizer import Optimizer
+
+
+class TrainState(NamedTuple):
+    step: jnp.ndarray
+    params: Any
+    opt_state: Any
+
+
+def init_state(params, optimizer: Optimizer) -> TrainState:
+    return TrainState(
+        step=jnp.zeros((), jnp.int32),
+        params=params,
+        opt_state=optimizer.init(params),
+    )
+
+
+def _split_microbatches(batch, n: int):
+    return jax.tree.map(
+        lambda x: x.reshape((n, x.shape[0] // n) + x.shape[1:]), batch
+    )
+
+
+def global_norm(tree) -> jnp.ndarray:
+    return jnp.sqrt(sum(
+        jnp.sum(jnp.square(x.astype(jnp.float32)))
+        for x in jax.tree.leaves(tree)
+    ))
+
+
+def build_train_step(
+    loss_fn: Callable[[Any, Any], jnp.ndarray],
+    optimizer: Optimizer,
+    *,
+    grad_accum: int = 1,
+    grad_clip: float = 1.0,
+    accum_dtype=jnp.float32,
+) -> Callable[[TrainState, Any], tuple[TrainState, dict]]:
+    """``loss_fn(params, batch) -> scalar``.  Returns ``step_fn(state,
+    batch) -> (state, metrics)`` ready for ``jax.jit``.
+
+    ``accum_dtype=bfloat16`` halves the accumulator footprint — the
+    arctic-480b memory-fit knob (fp32 accumulators alone would be
+    7.5 GB/chip there)."""
+
+    grad_fn = jax.value_and_grad(loss_fn)
+
+    def compute_grads(params, batch):
+        if grad_accum == 1:
+            return grad_fn(params, batch)
+        micro = _split_microbatches(batch, grad_accum)
+        zero = jax.tree.map(
+            lambda p: jnp.zeros(p.shape, accum_dtype), params
+        )
+
+        def body(carry, mb):
+            loss_sum, acc = carry
+            loss, grads = grad_fn(params, mb)
+            acc = jax.tree.map(
+                lambda a, g: a + (g / grad_accum).astype(accum_dtype),
+                acc, grads
+            )
+            return (loss_sum + loss / grad_accum, acc), None
+
+        (loss, grads), _ = jax.lax.scan(
+            body, (jnp.zeros((), jnp.float32), zero), micro
+        )
+        return loss, grads
+
+    def step_fn(state: TrainState, batch):
+        loss, grads = compute_grads(state.params, batch)
+        gnorm = global_norm(grads)
+        if grad_clip:
+            scale = jnp.minimum(1.0, grad_clip / (gnorm + 1e-9))
+            grads = jax.tree.map(lambda g: g * scale, grads)
+        new_params, new_opt = optimizer.update(
+            grads, state.opt_state, state.params, state.step
+        )
+        metrics = {
+            "loss": loss,
+            "grad_norm": gnorm,
+            "param_norm": global_norm(new_params),
+        }
+        return TrainState(state.step + 1, new_params, new_opt), metrics
+
+    return step_fn

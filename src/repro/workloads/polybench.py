@@ -1,0 +1,618 @@
+"""Table-4 benchmark suite (PolyBench/OpenMP + PARSEC blackscholes),
+re-implemented as (a) analytic trace generators for the parallel
+sections — the ROSE/Byfl stand-in (see tracegen.py), (b) Byfl-style
+OpCounts, and (c) JAX reference kernels.
+
+Input sizes are scaled down from the paper's standard inputs (their
+traces run 7–335 GB; DESIGN.md §7 records the substitution) but keep
+the exact loop structure, shared/private labeling, and per-iteration
+BB instances of the Grauer-Gray OpenMP implementations, so reuse
+behaviour per-set is faithful.
+
+Each parallel-for iteration is one dynamic BB instance — Algorithm 1
+splits instances across cores (static schedule) and offsets private
+references; arrays accessed through the shared struct stay shared.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Callable
+
+import numpy as np
+
+from repro.core.runtime_model import OpCounts
+from repro.core.trace.types import LabeledTrace
+from repro.workloads.tracegen import AddressSpace, TraceBuilder
+
+ELEM = 8
+
+
+@dataclass
+class Workload:
+    name: str
+    abbr: str
+    domain: str
+    build_trace: Callable[[], LabeledTrace]
+    op_counts: OpCounts
+    jax_fn: Callable | None = None
+    jax_args: Callable | None = None
+
+    def trace(self) -> LabeledTrace:
+        return self.build_trace()
+
+
+def _counts(fp=0.0, ints=0.0, divs=0.0, loads=0.0, stores=0.0) -> OpCounts:
+    return OpCounts(
+        int_ops=ints, fp_ops=fp, div_ops=divs, loads=loads, stores=stores,
+        total_bytes=(loads + stores) * ELEM,
+    )
+
+
+# --- linear algebra ------------------------------------------------------------
+
+
+def make_atax(n: int = 96) -> Workload:
+    """A^T·(A·x): two parallel-for sections over rows."""
+    sp = AddressSpace()
+    A = sp.array("A", n, n)
+    x = sp.array("x", n)
+    tmp = sp.array("tmp", n)
+    y = sp.array("y", n)
+
+    def build():
+        tb = TraceBuilder()
+        j = np.arange(n)
+        for i in range(n):
+            tb.interleaved_instance(
+                f"atax.tmp.{0}", [(A.addr(i, j), True), (x.addr(j), True)]
+            )
+            tb.instance("atax.tmp_w", [(tmp.addr(i), True)])
+        for i in range(n):
+            tb.interleaved_instance(
+                "atax.y", [(A.addr(i, j), True), (tmp.addr(np.full(n, i)), True)]
+            )
+            tb.instance("atax.y_w", [(y.addr(i), True)])
+        return tb.build()
+
+    counts = _counts(fp=4 * n * n, ints=2 * n * n,
+                     loads=4 * n * n, stores=2 * n)
+
+    def jax_fn(A, x):
+        return A.T @ (A @ x)
+
+    def jax_args(key):
+        import jax
+        kA, kx = jax.random.split(key)
+        return (jax.random.normal(kA, (n, n)), jax.random.normal(kx, (n,)))
+
+    return Workload("ATAX", "atx", "Linear Algebra", build, counts,
+                    jax_fn, jax_args)
+
+
+def make_bicg(n: int = 96) -> Workload:
+    sp = AddressSpace()
+    A = sp.array("A", n, n)
+    p = sp.array("p", n)
+    r = sp.array("r", n)
+    q = sp.array("q", n)
+    s = sp.array("s", n)
+
+    def build():
+        tb = TraceBuilder()
+        j = np.arange(n)
+        for i in range(n):
+            tb.interleaved_instance(
+                "bicg.q", [(A.addr(i, j), True), (p.addr(j), True)]
+            )
+            tb.instance("bicg.q_w", [(q.addr(i), True)])
+        for jj in range(n):
+            tb.interleaved_instance(
+                "bicg.s", [(A.addr(np.arange(n), jj), True), (r.addr(np.arange(n)), True)]
+            )
+            tb.instance("bicg.s_w", [(s.addr(jj), True)])
+        return tb.build()
+
+    counts = _counts(fp=4 * n * n, ints=2 * n * n,
+                     loads=4 * n * n, stores=2 * n)
+
+    def jax_fn(A, p, r):
+        return A @ p, A.T @ r
+
+    def jax_args(key):
+        import jax
+        k1, k2, k3 = jax.random.split(key, 3)
+        return (jax.random.normal(k1, (n, n)), jax.random.normal(k2, (n,)),
+                jax.random.normal(k3, (n,)))
+
+    return Workload("BICG", "bcg", "Linear Algebra", build, counts,
+                    jax_fn, jax_args)
+
+
+def make_mvt(n: int = 128) -> Workload:
+    sp = AddressSpace()
+    A = sp.array("A", n, n)
+    x1 = sp.array("x1", n)
+    x2 = sp.array("x2", n)
+    y1 = sp.array("y1", n)
+    y2 = sp.array("y2", n)
+
+    def build():
+        tb = TraceBuilder()
+        j = np.arange(n)
+        for i in range(n):
+            tb.instance("mvt.x1r", [(x1.addr(i), True)])
+            tb.interleaved_instance(
+                "mvt.x1", [(A.addr(i, j), True), (y1.addr(j), True)]
+            )
+            tb.instance("mvt.x1w", [(x1.addr(i), True)])
+        for i in range(n):
+            tb.instance("mvt.x2r", [(x2.addr(i), True)])
+            tb.interleaved_instance(
+                "mvt.x2", [(A.addr(j, i), True), (y2.addr(j), True)]
+            )
+            tb.instance("mvt.x2w", [(x2.addr(i), True)])
+        return tb.build()
+
+    counts = _counts(fp=4 * n * n, ints=2 * n * n,
+                     loads=4 * n * n + 2 * n, stores=2 * n)
+
+    def jax_fn(A, x1, x2, y1, y2):
+        return x1 + A @ y1, x2 + A.T @ y2
+
+    def jax_args(key):
+        import jax
+        ks = jax.random.split(key, 5)
+        return (jax.random.normal(ks[0], (n, n)),) + tuple(
+            jax.random.normal(k, (n,)) for k in ks[1:]
+        )
+
+    return Workload("MVT", "mvt", "Linear Algebra", build, counts,
+                    jax_fn, jax_args)
+
+
+def make_2mm(n: int = 40) -> Workload:
+    """D = alpha*A*B*C + beta*D (two matrix multiplies)."""
+    sp = AddressSpace()
+    A = sp.array("A", n, n)
+    B = sp.array("B", n, n)
+    C = sp.array("C", n, n)
+    D = sp.array("D", n, n)
+    tmp = sp.array("tmp", n, n)
+
+    def build():
+        tb = TraceBuilder()
+        k = np.arange(n)
+        for i in range(n):
+            for j in range(n):
+                tb.interleaved_instance(
+                    "2mm.tmp", [(A.addr(i, k), True), (B.addr(k, j), True)]
+                )
+                tb.instance("2mm.tmp_w", [(tmp.addr(i, j), True)])
+        for i in range(n):
+            for j in range(n):
+                tb.interleaved_instance(
+                    "2mm.D", [(tmp.addr(i, k), True), (C.addr(k, j), True)]
+                )
+                tb.instance("2mm.D_w", [(D.addr(i, j), True)])
+        return tb.build()
+
+    counts = _counts(fp=4 * n ** 3 + 3 * n * n, ints=2 * n ** 3,
+                     loads=4 * n ** 3, stores=2 * n * n)
+
+    def jax_fn(A, B, C, D):
+        return 1.5 * (A @ B) @ C + 1.2 * D
+
+    def jax_args(key):
+        import jax
+        ks = jax.random.split(key, 4)
+        return tuple(jax.random.normal(k, (n, n)) for k in ks)
+
+    return Workload("2MM", "2mm", "Linear Algebra", build, counts,
+                    jax_fn, jax_args)
+
+
+def make_symm(n: int = 48) -> Workload:
+    """Symmetric matrix multiply C = alpha·A·B + beta·C (A symmetric)."""
+    sp = AddressSpace()
+    A = sp.array("A", n, n)
+    B = sp.array("B", n, n)
+    C = sp.array("C", n, n)
+
+    def build():
+        tb = TraceBuilder()
+        for i in range(n):
+            for j in range(n):
+                k = np.arange(i)
+                if len(k):
+                    tb.interleaved_instance(
+                        "symm.acc",
+                        [(A.addr(i, k), True), (B.addr(k, j), True),
+                         (C.addr(k, j), True)],
+                    )
+                tb.instance("symm.w", [
+                    (A.addr(i, i), True), (B.addr(i, j), True),
+                    (C.addr(i, j), True),
+                ])
+        return tb.build()
+
+    counts = _counts(fp=3 * n * n * n / 2 + 4 * n * n,
+                     ints=n * n * n, loads=1.5 * n ** 3, stores=n * n)
+
+    def jax_fn(A, B, C):
+        sym = jnp_tril_sym(A)
+        return 1.5 * sym @ B + 1.2 * C
+
+    def jax_args(key):
+        import jax
+        ks = jax.random.split(key, 3)
+        return tuple(jax.random.normal(k, (n, n)) for k in ks)
+
+    return Workload("SYMM", "smm", "Linear Algebra", build, counts,
+                    jax_fn, jax_args)
+
+
+def jnp_tril_sym(A):
+    import jax.numpy as jnp
+
+    L = jnp.tril(A)
+    return L + L.T - jnp.diag(jnp.diag(A))
+
+
+def make_doitgen(nq: int = 16, nr: int = 16, npp: int = 16) -> Workload:
+    """Multi-resolution analysis kernel: sum[r,q,p] = A[r,q,s]·C4[s,p]."""
+    sp = AddressSpace()
+    A = sp.array("A", nr, nq, npp)
+    C4 = sp.array("C4", npp, npp)
+    s = sp.array("sum", nr, nq, npp)
+
+    def build():
+        tb = TraceBuilder()
+        ss = np.arange(npp)
+        for r in range(nr):
+            for q in range(nq):
+                for p in range(npp):
+                    tb.interleaved_instance(
+                        "doitgen.acc",
+                        [(A.addr(r, q, ss), True), (C4.addr(ss, p), True)],
+                    )
+                    tb.instance("doitgen.w", [(s.addr(r, q, p), True)])
+                tb.instance("doitgen.copy", [
+                    (s.addr(r, q, np.arange(npp)), True),
+                    (A.addr(r, q, np.arange(npp)), True),
+                ])
+        return tb.build()
+
+    total = nr * nq * npp * npp
+    counts = _counts(fp=2 * total, ints=total,
+                     loads=2 * total + nr * nq * npp,
+                     stores=nr * nq * npp * 2)
+
+    def jax_fn(A, C4):
+        import jax.numpy as jnp
+        return jnp.einsum("rqs,sp->rqp", A, C4)
+
+    def jax_args(key):
+        import jax
+        k1, k2 = jax.random.split(key)
+        return (jax.random.normal(k1, (nr, nq, npp)),
+                jax.random.normal(k2, (npp, npp)))
+
+    return Workload("Doitgen", "dgn", "Linear Algebra", build, counts,
+                    jax_fn, jax_args)
+
+
+def make_durbin(n: int = 256) -> Workload:
+    """Toeplitz solver — mostly sequential with a parallelizable inner
+    loop; the paper traces the parallel section (the z-updates)."""
+    sp = AddressSpace()
+    r = sp.array("r", n)
+    y = sp.array("y", n)
+    z = sp.array("z", n)
+
+    def build():
+        tb = TraceBuilder()
+        for k in range(1, n):
+            i = np.arange(k)
+            tb.interleaved_instance(
+                "durbin.z", [(r.addr(k - 1 - i), True), (y.addr(i), True)]
+            )
+            tb.instance("durbin.zw", [(z.addr(i), True), (y.addr(i), True)])
+            tb.instance("durbin.yk", [(y.addr(k), True), (r.addr(k), True)])
+        return tb.build()
+
+    counts = _counts(fp=2 * n * n, ints=n * n, divs=n,
+                     loads=1.5 * n * n, stores=n * n)
+    return Workload("Durbin", "dbn", "Linear Algebra", build, counts)
+
+
+def make_gramschmidt(n: int = 40) -> Workload:
+    sp = AddressSpace()
+    A = sp.array("A", n, n)
+    R = sp.array("R", n, n)
+    Q = sp.array("Q", n, n)
+
+    def build():
+        tb = TraceBuilder()
+        rows = np.arange(n)
+        for k in range(n):
+            tb.instance("gs.norm", [(A.addr(rows, k), True)])
+            tb.instance("gs.rkk", [(R.addr(k, k), True)])
+            tb.instance("gs.q", [(A.addr(rows, k), True), (Q.addr(rows, k), True)])
+            for j in range(k + 1, n):
+                tb.interleaved_instance(
+                    "gs.rkj", [(Q.addr(rows, k), True), (A.addr(rows, j), True)]
+                )
+                tb.instance("gs.rkj_w", [(R.addr(k, j), True)])
+                tb.interleaved_instance(
+                    "gs.update", [(A.addr(rows, j), True), (Q.addr(rows, k), True),
+                                  (R.addr(k, np.full(n, j)), True)]
+                )
+        return tb.build()
+
+    counts = _counts(fp=4 * n * n * n / 2 + 4 * n * n, ints=n ** 3 / 2,
+                     divs=n * n, loads=2.5 * n ** 3 / 2, stores=n ** 3 / 2)
+
+    def jax_fn(A):
+        import jax.numpy as jnp
+        q, r = jnp.linalg.qr(A)
+        return q, r
+
+    def jax_args(key):
+        import jax
+        return (jax.random.normal(key, (n, n)),)
+
+    return Workload("Gramschmidt", "grm", "Linear Algebra", build, counts,
+                    jax_fn, jax_args)
+
+
+def make_lu(n: int = 64) -> Workload:
+    sp = AddressSpace()
+    A = sp.array("A", n, n)
+
+    def build():
+        tb = TraceBuilder()
+        for k in range(n):
+            j = np.arange(k + 1, n)
+            if len(j) == 0:
+                continue
+            tb.instance("lu.div", [(A.addr(k, k), True), (A.addr(j, k), True)])
+            for i in range(k + 1, n):
+                tb.interleaved_instance(
+                    "lu.update",
+                    [(A.addr(np.full(n - k - 1, i), k), True),
+                     (A.addr(k, j), True), (A.addr(i, j), True)],
+                )
+        return tb.build()
+
+    counts = _counts(fp=2 * n ** 3 / 3, ints=n ** 3 / 3, divs=n * n / 2,
+                     loads=n ** 3, stores=n ** 3 / 3)
+    return Workload("LU", "lu", "Linear Algebra", build, counts)
+
+
+# --- stencils ------------------------------------------------------------------
+
+
+def make_jacobi2d(n: int = 64, tsteps: int = 2) -> Workload:
+    sp = AddressSpace()
+    A = sp.array("A", n, n)
+    B = sp.array("B", n, n)
+
+    def build():
+        tb = TraceBuilder()
+        j = np.arange(1, n - 1)
+        for _ in range(tsteps):
+            for i in range(1, n - 1):
+                tb.interleaved_instance(
+                    "jacobi.b",
+                    [(A.addr(i, j), True), (A.addr(i, j - 1), True),
+                     (A.addr(i, j + 1), True), (A.addr(i - 1, j), True),
+                     (A.addr(i + 1, j), True)],
+                )
+                tb.instance("jacobi.bw", [(B.addr(i, j), True)])
+            for i in range(1, n - 1):
+                tb.instance("jacobi.copy", [(B.addr(i, j), True),
+                                            (A.addr(i, j), True)])
+        return tb.build()
+
+    inner = (n - 2) * (n - 2) * tsteps
+    counts = _counts(fp=5 * inner, ints=2 * inner,
+                     loads=6 * inner, stores=2 * inner)
+
+    def jax_fn(A):
+        import jax.numpy as jnp
+        B = 0.2 * (A[1:-1, 1:-1] + A[1:-1, :-2] + A[1:-1, 2:]
+                   + A[:-2, 1:-1] + A[2:, 1:-1])
+        return B
+
+    def jax_args(key):
+        import jax
+        return (jax.random.normal(key, (n, n)),)
+
+    return Workload("Jacobi-2D", "jcb", "Stencils", build, counts,
+                    jax_fn, jax_args)
+
+
+def make_conv2d(n: int = 96) -> Workload:
+    sp = AddressSpace()
+    A = sp.array("A", n, n)
+    B = sp.array("B", n, n)
+
+    def build():
+        tb = TraceBuilder()
+        j = np.arange(1, n - 1)
+        for i in range(1, n - 1):
+            tb.interleaved_instance(
+                "c2d.row",
+                [(A.addr(i - 1, j - 1), True), (A.addr(i - 1, j), True),
+                 (A.addr(i - 1, j + 1), True), (A.addr(i, j - 1), True),
+                 (A.addr(i, j), True), (A.addr(i, j + 1), True),
+                 (A.addr(i + 1, j - 1), True), (A.addr(i + 1, j), True),
+                 (A.addr(i + 1, j + 1), True)],
+            )
+            tb.instance("c2d.w", [(B.addr(i, j), True)])
+        return tb.build()
+
+    inner = (n - 2) * (n - 2)
+    counts = _counts(fp=17 * inner, ints=2 * inner,
+                     loads=9 * inner, stores=inner)
+
+    def jax_fn(A):
+        import jax.numpy as jnp
+        k = jnp.asarray([[0.2, 0.5, -0.8], [-0.3, 0.6, -0.9],
+                         [0.4, 0.7, 0.1]])
+        from jax import lax
+        return lax.conv_general_dilated(
+            A[None, None], k[None, None], (1, 1), "VALID")[0, 0]
+
+    def jax_args(key):
+        import jax
+        return (jax.random.normal(key, (n, n)),)
+
+    return Workload("Convolution-2D", "c2d", "Stencils", build, counts,
+                    jax_fn, jax_args)
+
+
+def make_adi(n: int = 48, tsteps: int = 2) -> Workload:
+    """Alternating-direction implicit 2D heat: row sweeps then column
+    sweeps, both parallelized over the other axis."""
+    sp = AddressSpace()
+    X = sp.array("X", n, n)
+    A = sp.array("A", n, n)
+    B = sp.array("B", n, n)
+
+    def build():
+        tb = TraceBuilder()
+        for _ in range(tsteps):
+            for i in range(n):
+                j = np.arange(1, n)
+                tb.interleaved_instance(
+                    "adi.row",
+                    [(X.addr(i, j), True), (X.addr(i, j - 1), True),
+                     (A.addr(i, j), True), (B.addr(i, j), True),
+                     (B.addr(i, j - 1), True)],
+                )
+            for j_col in range(n):
+                i = np.arange(1, n)
+                tb.interleaved_instance(
+                    "adi.col",
+                    [(X.addr(i, j_col), True), (X.addr(i - 1, j_col), True),
+                     (A.addr(i, j_col), True), (B.addr(i, j_col), True),
+                     (B.addr(i - 1, j_col), True)],
+                )
+        return tb.build()
+
+    inner = 2 * n * (n - 1) * tsteps
+    counts = _counts(fp=6 * inner, ints=2 * inner, divs=2 * inner,
+                     loads=5 * inner, stores=2 * inner)
+    return Workload("ADI", "adi", "Stencils", build, counts)
+
+
+# --- data mining / RMS ----------------------------------------------------------
+
+
+def make_covariance(n: int = 64) -> Workload:
+    sp = AddressSpace()
+    data = sp.array("data", n, n)
+    cov = sp.array("cov", n, n)
+    mean = sp.array("mean", n)
+
+    def build():
+        tb = TraceBuilder()
+        rows = np.arange(n)
+        for j in range(n):
+            tb.instance("cov.mean", [(data.addr(rows, j), True),
+                                     (mean.addr(j), True)])
+        for i in range(n):
+            tb.instance("cov.center", [(data.addr(i, rows), True),
+                                       (mean.addr(rows), True)])
+        for i in range(n):
+            for j in range(i, n):
+                tb.interleaved_instance(
+                    "cov.acc",
+                    [(data.addr(rows, i), True), (data.addr(rows, j), True)],
+                )
+                tb.instance("cov.w", [(cov.addr(i, j), True),
+                                      (cov.addr(j, i), True)])
+        return tb.build()
+
+    counts = _counts(fp=n ** 3 + 4 * n * n, ints=n ** 3 / 2, divs=n + n * n / 2,
+                     loads=n ** 3 + 3 * n * n, stores=n * n + n)
+
+    def jax_fn(data):
+        import jax.numpy as jnp
+        c = data - data.mean(axis=0)
+        return c.T @ c / (data.shape[0] - 1)
+
+    def jax_args(key):
+        import jax
+        return (jax.random.normal(key, (n, n)),)
+
+    return Workload("Covariance", "cov", "Datamining", build, counts,
+                    jax_fn, jax_args)
+
+
+def make_blackscholes(num_options: int = 2048) -> Workload:
+    """PARSEC blackscholes: embarrassingly parallel over options; each
+    option reads a 6-field struct and writes a price (AoS layout)."""
+    sp = AddressSpace()
+    opt = sp.array("options", num_options, 6)
+    price = sp.array("prices", num_options)
+
+    def build():
+        tb = TraceBuilder()
+        f = np.arange(6)
+        # 100 runs in the paper; 4 here (trace size), same reuse pattern
+        for _ in range(4):
+            for i in range(num_options):
+                tb.instance("blk.opt", [(opt.addr(i, f), True)])
+                tb.instance("blk.w", [(price.addr(i), True)])
+        return tb.build()
+
+    runs = 4
+    counts = _counts(fp=120 * num_options * runs, ints=10 * num_options * runs,
+                     divs=6 * num_options * runs,
+                     loads=6 * num_options * runs, stores=num_options * runs)
+
+    def jax_fn(s, k, t, r, v):
+        import jax
+        import jax.numpy as jnp
+        d1 = (jnp.log(s / k) + (r + 0.5 * v * v) * t) / (v * jnp.sqrt(t))
+        d2 = d1 - v * jnp.sqrt(t)
+        cnd = lambda x: 0.5 * (1 + jax.scipy.special.erf(x / jnp.sqrt(2.0)))
+        return s * cnd(d1) - k * jnp.exp(-r * t) * cnd(d2)
+
+    def jax_args(key):
+        import jax
+        ks = jax.random.split(key, 5)
+        u = lambda k, lo, hi: lo + (hi - lo) * jax.random.uniform(
+            k, (num_options,))
+        return (u(ks[0], 10, 100), u(ks[1], 10, 100), u(ks[2], 0.1, 2),
+                u(ks[3], 0.01, 0.1), u(ks[4], 0.1, 0.6))
+
+    return Workload("Blackscholes", "blk", "RMS", build, counts,
+                    jax_fn, jax_args)
+
+
+# --- registry -------------------------------------------------------------------
+
+MAKERS = {
+    "adi": make_adi,
+    "atx": make_atax,
+    "bcg": make_bicg,
+    "blk": make_blackscholes,
+    "c2d": make_conv2d,
+    "cov": make_covariance,
+    "dgn": make_doitgen,
+    "dbn": make_durbin,
+    "grm": make_gramschmidt,
+    "jcb": make_jacobi2d,
+    "lu": make_lu,
+    "2mm": make_2mm,
+    "mvt": make_mvt,
+    "smm": make_symm,
+}
+
+
+def all_workloads(subset: list[str] | None = None) -> list[Workload]:
+    keys = subset or list(MAKERS)
+    return [MAKERS[k]() for k in keys]

@@ -1,0 +1,86 @@
+"""Roofline math + HLO->trace (PPT-on-XLA) tests."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.analysis.roofline import Roofline, format_table, model_flops
+
+
+def _r(**kw):
+    base = dict(arch="a", shape="train_4k", mesh="pod", kind="train",
+                compute_s=1.0, memory_s=0.5, collective_s=0.25,
+                model_flops_chip=197e12 * 0.8, hlo_flops_chip=197e12,
+                chips=256)
+    base.update(kw)
+    return Roofline(**base)
+
+
+def test_bottleneck_and_bound():
+    r = _r()
+    assert r.bottleneck == "compute"
+    assert r.t_step_bound_s == 1.0
+    assert _r(memory_s=2.0).bottleneck == "memory"
+    assert _r(collective_s=3.0).bottleneck == "collective"
+
+
+def test_roofline_fraction_definition():
+    r = _r()
+    # useful flops at 80% of hlo flops, compute-bound -> fraction 0.8
+    assert r.roofline_fraction == pytest.approx(0.8)
+    # memory-bound halves the fraction
+    r2 = _r(memory_s=2.0)
+    assert r2.roofline_fraction == pytest.approx(0.4)
+
+
+def test_model_flops_conventions():
+    n, s, b = 8e9, 4096, 256
+    assert model_flops("train", n, s, b) == 6 * n * s * b
+    assert model_flops("prefill", n, s, b) == 2 * n * s * b
+    assert model_flops("decode", n, s, b) == 2 * n * b
+
+
+def test_format_table_includes_all_rows():
+    out = format_table([_r(), _r(arch="b", shape="decode_32k")])
+    assert "train_4k" in out and "decode_32k" in out
+
+
+def test_hlo_trace_roundtrip_and_vmem_rate():
+    from repro.analysis.hlo_trace import hlo_to_trace, vmem_hit_rate
+
+    def body(x, _):
+        return jnp.tanh(x @ x), None
+
+    def f(x):
+        y, _ = jax.lax.scan(body, x, None, length=6)
+        return y.sum()
+
+    txt = jax.jit(f).lower(
+        jnp.ones((256, 256), jnp.float32)).compile().as_text()
+    trace, info = hlo_to_trace(txt, loop_cap=2)
+    assert len(trace) > 0
+    assert info["touched_bytes"] > 256 * 256 * 4
+    assert info["loop_scale"] >= 3.0  # 6 trips emitted as 2
+    rate = vmem_hit_rate(trace)
+    assert 0.0 <= rate <= 1.0
+    # a 256KB working set reused across iterations must be VMEM-resident
+    assert rate > 0.5
+
+
+def test_refined_memory_term_discounts_reuse():
+    from repro.analysis.hlo_trace import hlo_to_trace, refined_memory_term
+
+    def f(x):
+        def body(c, _):
+            return jnp.tanh(c @ c), None
+        y, _ = jax.lax.scan(body, x, None, length=8)
+        return y.sum()
+
+    txt = jax.jit(f).lower(
+        jnp.ones((128, 128), jnp.float32)).compile().as_text()
+    trace, info = hlo_to_trace(txt)
+    out = refined_memory_term(info["touched_bytes"], trace)
+    assert out["refined_memory_s"] <= out["flat_memory_s"]
+    assert out["vmem_hit_rate"] > 0.5

@@ -1,0 +1,72 @@
+"""Exact LRU simulator vs a brute-force reference implementation."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.cachesim import (
+    CacheLevelConfig,
+    simulate_hierarchy,
+    simulate_level,
+)
+
+
+def brute_force_lru(addresses, cfg: CacheLevelConfig) -> np.ndarray:
+    """Straightforward set-associative LRU — the slow reference."""
+    sets: list[list[int]] = [[] for _ in range(cfg.num_sets)]
+    hits = np.zeros(len(addresses), dtype=bool)
+    for i, a in enumerate(addresses):
+        line = a // cfg.line_size
+        s = line % cfg.num_sets
+        ways = sets[s]
+        if line in ways:
+            hits[i] = True
+            ways.remove(line)
+        elif len(ways) >= cfg.effective_assoc:
+            ways.pop()  # evict LRU (tail)
+        ways.insert(0, line)
+    return hits
+
+
+@settings(max_examples=40, deadline=None)
+@given(
+    st.lists(st.integers(min_value=0, max_value=4095), min_size=1, max_size=500),
+    st.sampled_from([(256, 16, 1), (256, 16, 4), (512, 32, 2), (1024, 64, 16)]),
+)
+def test_matches_brute_force(addresses, geometry):
+    size, line, assoc = geometry
+    cfg = CacheLevelConfig("T", size, line, assoc)
+    addrs = np.asarray(addresses, dtype=np.int64)
+    got = simulate_level(addrs, cfg)
+    want = brute_force_lru(addrs, cfg)
+    assert np.array_equal(got, want)
+
+
+def test_fully_associative():
+    cfg = CacheLevelConfig("FA", 4 * 64, 64, 1000)  # 4 lines, fully assoc
+    # touch 4 lines then the first again -> still resident
+    addrs = np.array([0, 64, 128, 192, 0])
+    assert simulate_level(addrs, cfg).tolist() == [False] * 4 + [True]
+    # 5 distinct lines evicts the first
+    addrs = np.array([0, 64, 128, 192, 256, 0])
+    assert simulate_level(addrs, cfg).tolist() == [False] * 5 + [False]
+
+
+def test_hierarchy_cumulative_metric():
+    rng = np.random.default_rng(3)
+    addrs = rng.integers(0, 1 << 16, size=5000)
+    levels = [
+        CacheLevelConfig("L1", 1024, 64, 4),
+        CacheLevelConfig("L2", 16 * 1024, 64, 8),
+    ]
+    res = simulate_hierarchy(addrs, levels)
+    # cumulative: level hit rates are non-decreasing down the hierarchy
+    assert res[1].cumulative_hit_rate >= res[0].cumulative_hit_rate
+    # L2 sees exactly the L1 misses
+    assert res[1].accesses == res[0].accesses - res[0].hits
+    # identity: 1 - cum_rate_L2 == L2 misses / total
+    miss2 = res[1].accesses - res[1].hits
+    assert abs((1 - res[1].cumulative_hit_rate) - miss2 / 5000) < 1e-12
+
+
+def test_empty():
+    assert simulate_hierarchy([], [CacheLevelConfig("L1", 1024, 64, 4)])[0].hits == 0

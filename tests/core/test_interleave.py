@@ -1,0 +1,85 @@
+"""Algorithm 2 (interleaving) + CRD semantics (paper Table 3)."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.reuse.distance import reuse_distances
+from repro.core.trace.interleave import interleave_traces
+from repro.core.trace.types import LabeledTrace
+
+
+def mk(addrs, shared=None):
+    addrs = np.asarray(addrs, dtype=np.int64)
+    shared = (
+        np.zeros(len(addrs), dtype=bool)
+        if shared is None
+        else np.asarray(shared, dtype=bool)
+    )
+    return LabeledTrace(addrs, np.zeros(len(addrs), np.int32), shared)
+
+
+def test_round_robin_pattern():
+    t0, t1 = mk([1, 2, 3]), mk([10, 20, 30])
+    il = interleave_traces([t0, t1], "round_robin")
+    assert il.addresses.tolist() == [1, 10, 2, 20, 3, 30]
+
+
+def test_round_robin_uneven_skips_exhausted():
+    t0, t1 = mk([1, 2, 3, 4]), mk([10])
+    il = interleave_traces([t0, t1], "round_robin")
+    assert il.addresses.tolist() == [1, 10, 2, 3, 4]
+
+
+def test_chunked():
+    t0, t1 = mk([1, 2, 3, 4]), mk([10, 20, 30, 40])
+    il = interleave_traces([t0, t1], "chunked", chunk_size=2)
+    assert il.addresses.tolist() == [1, 2, 10, 20, 3, 4, 30, 40]
+
+
+@settings(max_examples=30, deadline=None)
+@given(
+    st.lists(
+        st.lists(st.integers(min_value=0, max_value=100), min_size=0, max_size=40),
+        min_size=1,
+        max_size=6,
+    ),
+    st.sampled_from(["round_robin", "uniform", "chunked"]),
+)
+def test_conservation_and_order(cores, strategy):
+    traces = [mk(c) for c in cores]
+    il = interleave_traces([t for t in traces], strategy, chunk_size=3, seed=7)
+    # conservation: multiset of addresses preserved
+    allconc = np.concatenate([t.addresses for t in traces])
+    assert sorted(il.addresses.tolist()) == sorted(allconc.tolist())
+    assert len(il) == len(allconc)
+
+
+def test_uniform_preserves_per_core_order():
+    t0 = mk(list(range(100)))
+    t1 = mk(list(range(1000, 1100)))
+    il = interleave_traces([t0, t1], "uniform", seed=3)
+    a = il.addresses
+    sub0 = a[a < 1000]
+    sub1 = a[a >= 1000]
+    assert (np.diff(sub0) > 0).all() and (np.diff(sub1) > 0).all()
+
+
+def test_uniform_seeds_differ():
+    t0 = mk(list(range(50)))
+    t1 = mk(list(range(1000, 1050)))
+    a = interleave_traces([t0, t1], "uniform", seed=0).addresses
+    b = interleave_traces([t0, t1], "uniform", seed=1).addresses
+    assert not np.array_equal(a, b)
+
+
+def test_paper_table3_crd_effects():
+    """Table 3: dilation, overlap, interception on the shared trace."""
+    # shared trace from Table 3: u w v u y x v x u v
+    shared = [ord(c) for c in "uwvuyxvxuv"]
+    crd = reuse_distances(shared)
+    assert crd[3] == 2  # u at time 4: CRD 2 (dilation: PRD was 1)
+    assert crd[8] == 3  # u at time 9: CRD 3 not 4 (overlap: x shared)
+    assert crd[9] == 2  # v at time 10: CRD 2 < PRD (interception)
+    # core C1's private trace: u v u y x u v
+    prd = reuse_distances([ord(c) for c in "uvuyxuv"])
+    assert prd[2] == 1  # u's PRD at time 4 == 1 (dilation reference)

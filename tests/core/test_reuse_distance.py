@@ -1,0 +1,89 @@
+"""Reuse distance: paper Table 1 golden values + oracle equivalence."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.reuse.distance import (
+    INF_RD,
+    compact_ids,
+    per_set_reuse_distances,
+    reuse_distances,
+    reuse_distances_ref,
+)
+
+
+def test_paper_table1_golden():
+    # w x w y x z z w  ->  inf inf 1 inf 2 inf 0 3
+    trace = [ord(c) for c in "wxwyxzzw"]
+    expected = [INF_RD, INF_RD, 1, INF_RD, 2, INF_RD, 0, 3]
+    assert reuse_distances_ref(trace).tolist() == expected
+    assert reuse_distances(trace).tolist() == expected
+
+
+def test_first_touch_is_inf():
+    rds = reuse_distances(np.arange(100))
+    assert (rds == INF_RD).all()
+
+
+def test_repeated_single_address():
+    rds = reuse_distances(np.zeros(50, dtype=np.int64))
+    assert rds[0] == INF_RD
+    assert (rds[1:] == 0).all()
+
+
+def test_line_granularity():
+    # addresses within the same 64B line are one element
+    addrs = np.array([0, 8, 16, 64, 0])
+    rds = reuse_distances(addrs, line_size=64)
+    assert rds.tolist() == [INF_RD, 0, 0, INF_RD, 1]
+
+
+@settings(max_examples=80, deadline=None)
+@given(
+    st.lists(st.integers(min_value=0, max_value=40), min_size=1, max_size=400)
+)
+def test_fenwick_matches_stack_oracle(trace):
+    t = np.asarray(trace, dtype=np.int64)
+    assert np.array_equal(reuse_distances(t), reuse_distances_ref(t))
+
+
+@settings(max_examples=30, deadline=None)
+@given(
+    st.lists(st.integers(min_value=0, max_value=10_000), min_size=1, max_size=300)
+)
+def test_rd_bounded_by_distinct_count(trace):
+    t = np.asarray(trace, dtype=np.int64)
+    rds = reuse_distances(t)
+    m = len(np.unique(t))
+    assert rds.max(initial=INF_RD) < m
+    # every address's first touch is INF, exactly m INF entries
+    assert int((rds == INF_RD).sum()) == m
+
+
+def test_per_set_equals_global_with_one_set():
+    rng = np.random.default_rng(0)
+    t = rng.integers(0, 1 << 16, size=2000)
+    a = per_set_reuse_distances(t, line_size=64, num_sets=1)
+    b = reuse_distances(t, line_size=64)
+    assert np.array_equal(a, b)
+
+
+def test_per_set_partitions_correctly():
+    # two sets; same-set accesses interleaved with other-set noise must
+    # not inflate the distance
+    line = 64
+    # lines 0,2,4 -> set 0 ; lines 1,3 -> set 1 (2 sets)
+    addrs = np.array([0, 64, 128, 64 * 3, 0]) * 1
+    rds = per_set_reuse_distances(addrs, line_size=line, num_sets=2)
+    # final access to line 0: only line 2 (set 0) intervenes -> distance 1
+    assert rds[-1] == 1
+
+
+def test_compact_ids_dense():
+    ids = compact_ids(np.array([10**12, 5, 10**12, 7]))
+    assert ids.max() == 2 and ids.min() == 0
+    assert ids[0] == ids[2]
+
+
+def test_empty_trace():
+    assert reuse_distances(np.empty(0, dtype=np.int64)).size == 0

@@ -1,0 +1,94 @@
+"""Runtime model (Eq. 4-7) hand-computed checks."""
+import math
+
+import pytest
+
+from repro.core.runtime_model import (
+    OpCounts,
+    cumulative_to_conditional,
+    effective_beta_cy,
+    effective_latency_cy,
+    level_chain,
+    noncontiguous_block_size,
+    predict_runtime_s,
+    t_cpu_s,
+    t_mem_s,
+)
+from repro.hw.targets import HASWELL_I7_5960X as HW
+
+
+def test_eq6_hand_computed():
+    # delta_avg = P1 d1 + (1-P1)[P2 d2 + (1-P2)[P3 d3 + (1-P3) dram]]
+    p = [0.9, 0.8, 0.5]
+    d = list(HW.level_latency_cy)
+    dram = HW.ram_latency_cy
+    expected = p[0] * d[0] + (1 - p[0]) * (
+        p[1] * d[1] + (1 - p[1]) * (p[2] * d[2] + (1 - p[2]) * dram)
+    )
+    assert abs(effective_latency_cy(HW, p) - expected) < 1e-12
+
+
+def test_eq6_limits():
+    assert effective_latency_cy(HW, [1.0, 0.0, 0.0]) == HW.level_latency_cy[0]
+    assert effective_latency_cy(HW, [0.0, 0.0, 0.0]) == HW.ram_latency_cy
+
+
+def test_eq7_uses_betas():
+    p = [0.5, 0.5, 0.5]
+    assert effective_beta_cy(HW, p) < effective_latency_cy(HW, p)
+
+
+def test_eq5_block_amortization():
+    """Larger blocks amortize the latency term: per-byte cost falls."""
+    rates = [0.9, 0.8, 0.5]
+    t_small = t_mem_s(HW, rates, 1e6, block_bytes=8)
+    t_large = t_mem_s(HW, rates, 1e6, block_bytes=64)
+    assert t_large < t_small
+
+
+def test_noncontiguous_clamps():
+    assert noncontiguous_block_size(10, 64, 4096) == 64          # <= C -> C
+    assert noncontiguous_block_size(100, 64, 4096) == 128        # ceil to C
+    assert noncontiguous_block_size(10_000, 64, 4096) == 4096    # >= S -> S
+
+
+def test_gap_increases_block():
+    rates = [0.9, 0.8, 0.5]
+    t0 = t_mem_s(HW, rates, 1e6)
+    t1 = t_mem_s(HW, rates, 1e6, gap_bytes=24.0)
+    assert t1 != t0  # non-contiguous model engaged
+
+
+def test_tcpu_modes():
+    c = OpCounts(int_ops=1000, fp_ops=500, div_ops=10)
+    thr = t_cpu_s(HW, c, "throughput")
+    lat = t_cpu_s(HW, c, "latency")
+    # latency-bound chain is slower than pipelined issue
+    assert lat > thr > 0
+    i = HW.instr
+    expected_thr_cy = (
+        (i.delta_int + 999 * i.beta_int)
+        + (i.delta_fp + 499 * i.beta_fp)
+        + (i.delta_div + 9 * i.beta_div)
+    )
+    assert abs(thr - expected_thr_cy * HW.cycle_s) < 1e-15
+
+
+def test_predict_runtime_divides_work():
+    c = OpCounts(int_ops=8000, fp_ops=8000, div_ops=0, total_bytes=1e6)
+    r1 = predict_runtime_s(HW, [0.9, 0.8, 0.5], c, 1)
+    r8 = predict_runtime_s(HW, [0.9, 0.8, 0.5], c, 8)
+    assert r8["t_pred_s"] < r1["t_pred_s"]
+    assert abs(r1["t_mem_s"] / 8 - r8["t_mem_s"]) / r8["t_mem_s"] < 1e-9
+
+
+def test_cumulative_to_conditional():
+    cond = cumulative_to_conditional([0.5, 0.75, 1.0])
+    assert abs(cond[0] - 0.5) < 1e-12
+    assert abs(cond[1] - 0.5) < 1e-12  # (0.75-0.5)/0.5
+    assert abs(cond[2] - 1.0) < 1e-12
+
+
+def test_unknown_mode_raises():
+    with pytest.raises(ValueError):
+        t_cpu_s(HW, OpCounts(int_ops=1), mode="warp")

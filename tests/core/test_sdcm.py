@@ -1,0 +1,84 @@
+"""SDCM (Eq. 1-3): oracle agreement, bounds, monotonicity."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.reuse.profile import profile_from_trace
+from repro.core.sdcm import hit_rate, phit_given_d, phit_given_d_np
+
+
+def test_direct_mapped_formula():
+    # Eq. 2: ((B-1)/B)^D
+    d = np.array([0, 1, 10, 100])
+    b = 64
+    expected = ((b - 1) / b) ** d.astype(float)
+    got = np.asarray(phit_given_d(d, 1, b))
+    np.testing.assert_allclose(got, expected, rtol=1e-5)
+
+
+def test_inf_distance_never_hits():
+    assert float(phit_given_d(np.array([-1]), 8, 512)[0]) == 0.0
+    assert phit_given_d_np(np.array([-1]), 8, 512)[0] == 0.0
+
+
+def test_small_distance_always_hits():
+    # D <= A-1 can't overflow the set
+    for A, B in [(4, 64), (8, 512), (20, 4096)]:
+        d = np.arange(A)
+        assert np.allclose(np.asarray(phit_given_d(d, A, B)), 1.0)
+        assert np.allclose(phit_given_d_np(d, A, B), 1.0)
+
+
+def test_fully_associative_is_exact_lru():
+    # A == B: hit iff D < B
+    d = np.array([0, 63, 64, 100, -1])
+    got = np.asarray(phit_given_d(d, 64, 64))
+    np.testing.assert_allclose(got, [1, 1, 0, 0, 0])
+
+
+@settings(max_examples=60, deadline=None)
+@given(
+    st.integers(min_value=2, max_value=24),
+    st.integers(min_value=2, max_value=14),
+    st.lists(st.integers(min_value=-1, max_value=100_000), min_size=1, max_size=32),
+)
+def test_jax_matches_float64_oracle(assoc, log_blocks, distances):
+    blocks = 2 ** log_blocks
+    if assoc > blocks:
+        assoc = blocks
+    d = np.asarray(distances, dtype=np.int64)
+    a = np.asarray(phit_given_d(d, assoc, blocks), dtype=np.float64)
+    b = phit_given_d_np(d, assoc, blocks)
+    np.testing.assert_allclose(a, b, atol=3e-4)
+
+
+@settings(max_examples=40, deadline=None)
+@given(
+    st.integers(min_value=1, max_value=16),
+    st.integers(min_value=4, max_value=12),
+    st.integers(min_value=0, max_value=50_000),
+)
+def test_bounds_and_monotonicity_in_capacity(assoc, log_blocks, d):
+    """P(h|D) in [0,1] and grows with cache size at fixed associativity."""
+    b1, b2 = 2 ** log_blocks, 2 ** (log_blocks + 1)
+    d_arr = np.array([d])
+    p1 = phit_given_d_np(d_arr, assoc, b1)[0]
+    p2 = phit_given_d_np(d_arr, assoc, b2)[0]
+    assert 0.0 <= p1 <= 1.0 and 0.0 <= p2 <= 1.0
+    assert p2 >= p1 - 1e-12
+
+
+def test_monotonically_decreasing_in_distance():
+    d = np.arange(0, 2000, 7)
+    p = phit_given_d_np(d, 8, 512)
+    assert (np.diff(p) <= 1e-12).all()
+
+
+def test_hit_rate_from_profile_table2():
+    # Table 1/2 trace with a fully-assoc cache of 4 blocks: the paper
+    # notes "none of the memory references will cause a capacity miss"
+    # -> all finite-D references hit; only the 4 compulsory misses miss.
+    trace = [ord(c) for c in "wxwyxzzw"]
+    prof = profile_from_trace(trace)
+    p = hit_rate(prof, 4, 4)
+    assert abs(p - 0.5) < 1e-12  # 4 hits / 8 accesses

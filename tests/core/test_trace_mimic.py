@@ -1,0 +1,104 @@
+"""Algorithm 1 (private trace mimicking) semantics."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.trace.mimic import choose_offset, core_assignment, gen_private_traces
+from repro.core.trace.types import LabeledTrace, trace_from_blocks
+
+
+def toy_trace(num_iters=8, shared_addr=1000):
+    blocks = [("entry", np.array([shared_addr, shared_addr + 8]), True)]
+    for i in range(num_iters):
+        blocks.append(
+            (
+                "for.body",
+                np.array([2000 + 8 * i, shared_addr]),
+                np.array([False, True]),
+            )
+        )
+    return trace_from_blocks(blocks)
+
+
+def test_single_instance_blocks_replicated():
+    tr = toy_trace(8)
+    privs = gen_private_traces(tr, 4)
+    for p in privs:
+        # entry block (1 instance < 4 cores) present on every core
+        names = {p.bb_names[b] for b in np.unique(p.bb_ids)}
+        assert "entry" in names
+        assert len(p) == 2 + 2 * 2  # entry + 8/4 loop instances x 2 refs
+
+
+def test_loop_instances_split_evenly():
+    tr = toy_trace(16)
+    _, core = core_assignment(tr, 4)
+    body_mask = tr.bb_ids == 1
+    counts = np.bincount(core[body_mask], minlength=4)
+    assert (counts == counts[0]).all()
+
+
+def test_offsets_distinct_and_shared_preserved():
+    tr = toy_trace(8, shared_addr=1000)
+    privs = gen_private_traces(tr, 4)
+    for c, p in enumerate(privs):
+        shared_addrs = set(p.addresses[p.shared_mask].tolist())
+        assert shared_addrs == {1000, 1008}  # shared refs never offset
+        priv_addrs = set(p.addresses[~p.shared_mask].tolist())
+        for c2 in range(c):
+            other = set(
+                privs[c2].addresses[~privs[c2].shared_mask].tolist()
+            )
+            assert not (priv_addrs & other), "private refs must not collide"
+
+
+def test_master_core_keeps_original_addresses():
+    tr = toy_trace(8)
+    privs = gen_private_traces(tr, 4)
+    assert set(privs[0].addresses.tolist()) <= set(tr.addresses.tolist())
+
+
+def test_one_core_is_identity():
+    tr = toy_trace(8)
+    (only,) = gen_private_traces(tr, 1)
+    assert np.array_equal(only.addresses, tr.addresses)
+
+
+def test_chunked_assignment():
+    tr = toy_trace(16)
+    _, core = core_assignment(tr, 4, chunk_size=2)
+    body_inst = tr.instance_index()[tr.bb_ids == 1]
+    expected = (body_inst // 2) % 4
+    assert np.array_equal(core[tr.bb_ids == 1], expected)
+
+
+def test_remainder_instances_clamped_to_last_core():
+    tr = toy_trace(10)  # 10 instances over 4 cores -> per_core=2, inst 8,9 -> core 3
+    _, core = core_assignment(tr, 4)
+    assert core[tr.bb_ids == 1].max() == 3
+
+
+def test_choose_offset_exceeds_footprint():
+    addrs = np.array([0, 100, 5000])
+    off = choose_offset(addrs)
+    assert off > 5000 and off % 4096 == 0
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    st.integers(min_value=2, max_value=8),
+    st.integers(min_value=1, max_value=40),
+)
+def test_reference_conservation(num_cores, num_iters):
+    """Every original reference lands on >= 1 core; split blocks' refs
+    appear exactly once across cores; replicated blocks appear num_cores
+    times."""
+    tr = toy_trace(num_iters)
+    privs = gen_private_traces(tr, num_cores)
+    total = sum(len(p) for p in privs)
+    n_entry = 2
+    n_body = 2 * num_iters
+    if num_iters < num_cores:
+        assert total == num_cores * (n_entry + n_body)
+    else:
+        assert total == num_cores * n_entry + n_body

@@ -1,0 +1,67 @@
+"""Flash attention Pallas kernel: shape/dtype/GQA/causal sweep."""
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.flash_attention import attention_ref, flash_attention
+
+
+def make(b, h, hkv, sq, sk, d, dtype, seed=0):
+    ks = jax.random.split(jax.random.PRNGKey(seed), 3)
+    q = jax.random.normal(ks[0], (b, h, sq, d), dtype)
+    k = jax.random.normal(ks[1], (b, hkv, sk, d), dtype)
+    v = jax.random.normal(ks[2], (b, hkv, sk, d), dtype)
+    return q, k, v
+
+
+@pytest.mark.parametrize("causal", [False, True])
+@pytest.mark.parametrize(
+    "b,h,hkv,s,d",
+    [
+        (1, 1, 1, 128, 64),
+        (2, 4, 2, 256, 64),
+        (1, 8, 1, 128, 128),   # MQA
+        (1, 4, 4, 384, 32),    # MHA
+    ],
+)
+def test_matches_ref_f32(b, h, hkv, s, d, causal):
+    q, k, v = make(b, h, hkv, s, s, d, jnp.float32)
+    got = flash_attention(q, k, v, causal=causal, interpret=True)
+    ref = attention_ref(q, k, v, causal=causal)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(ref), atol=2e-5)
+
+
+def test_bf16_inputs():
+    q, k, v = make(1, 2, 1, 128, 128, 64, jnp.bfloat16)
+    got = flash_attention(q, k, v, causal=True, interpret=True)
+    ref = attention_ref(q, k, v, causal=True)
+    assert got.dtype == jnp.bfloat16
+    np.testing.assert_allclose(
+        np.asarray(got, dtype=np.float32),
+        np.asarray(ref, dtype=np.float32),
+        atol=3e-2,
+    )
+
+
+def test_cross_attention_longer_kv():
+    # decode-style: few queries, long KV
+    q, k, v = make(1, 2, 2, 128, 512, 64, jnp.float32)
+    got = flash_attention(q, k, v, causal=False, interpret=True)
+    ref = attention_ref(q, k, v, causal=False)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(ref), atol=2e-5)
+
+
+def test_block_size_invariance():
+    q, k, v = make(1, 2, 2, 256, 256, 64, jnp.float32)
+    a = flash_attention(q, k, v, causal=True, blk_q=64, blk_k=128, interpret=True)
+    b = flash_attention(q, k, v, causal=True, blk_q=128, blk_k=64, interpret=True)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=2e-5)
+
+
+def test_scale_override():
+    q, k, v = make(1, 1, 1, 128, 128, 64, jnp.float32)
+    got = flash_attention(q, k, v, scale=0.25, interpret=True)
+    ref = attention_ref(q, k, v, scale=0.25)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(ref), atol=2e-5)

@@ -1,0 +1,149 @@
+"""Checkpoint/restart + elastic re-shard + straggler monitor tests."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.dist.sharding import ShardingRules
+from repro.launch.mesh import make_host_mesh
+from repro.runtime.checkpoint import (
+    CheckpointManager, restore_checkpoint, save_checkpoint,
+)
+from repro.runtime.elastic import fits, plan_remesh
+from repro.runtime.straggler import StragglerMonitor
+
+
+def _state():
+    return {
+        "step": jnp.asarray(7, jnp.int32),
+        "params": {
+            "w": jnp.arange(32, dtype=jnp.float32).reshape(4, 8),
+            "b": jnp.ones((8,), jnp.bfloat16),
+        },
+    }
+
+
+def _axes():
+    return {"step": (), "params": {"w": ("embed", "mlp"), "b": ("mlp",)}}
+
+
+def test_save_restore_roundtrip(tmp_path):
+    state = _state()
+    save_checkpoint(tmp_path, 7, state, _axes())
+    abstract = jax.tree.map(
+        lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype), state)
+    restored = restore_checkpoint(tmp_path / "step_00000007", abstract)
+    for a, b in zip(jax.tree.leaves(state), jax.tree.leaves(restored)):
+        np.testing.assert_array_equal(np.asarray(a, np.float32),
+                                      np.asarray(b, np.float32))
+
+
+def test_manager_rolling_and_resume(tmp_path):
+    mgr = CheckpointManager(tmp_path, keep=2, async_write=False)
+    state = _state()
+    for step in (1, 2, 3):
+        mgr.save(step, state, _axes())
+    assert mgr.steps() == [2, 3]
+    abstract = jax.tree.map(
+        lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype), state)
+    step, restored = mgr.restore_latest(abstract)
+    assert step == 3
+    assert int(restored["step"]) == 7
+
+
+def test_async_save_then_wait(tmp_path):
+    mgr = CheckpointManager(tmp_path, keep=3, async_write=True)
+    mgr.save(5, _state(), _axes())
+    mgr.wait()
+    assert mgr.latest_step() == 5
+
+
+def test_elastic_restore_onto_mesh(tmp_path):
+    state = _state()
+    save_checkpoint(tmp_path, 1, state, _axes())
+    rules = ShardingRules(make_host_mesh())
+    abstract = jax.tree.map(
+        lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype), state)
+    restored = restore_checkpoint(tmp_path / "step_00000001", abstract,
+                                  rules)
+    np.testing.assert_array_equal(
+        np.asarray(restored["params"]["w"]), np.asarray(state["params"]["w"]))
+    assert restored["params"]["w"].sharding is not None
+
+
+def test_plan_remesh_reports_fallbacks(tmp_path):
+    state = {"w": jnp.zeros((6, 8), jnp.float32)}
+    save_checkpoint(tmp_path, 1, state, {"w": ("vocab", "mlp")})
+    mesh = make_host_mesh()  # 1 device -> everything replicates
+    plan = plan_remesh(tmp_path / "step_00000001", mesh)
+    assert plan.bytes_per_device == 6 * 8 * 4
+    assert fits(plan, hbm_bytes=16 * 2**30)
+    assert "GiB/device" in plan.summary()
+
+
+def test_shape_mismatch_rejected(tmp_path):
+    state = _state()
+    save_checkpoint(tmp_path, 1, state, _axes())
+    bad = dict(state)
+    bad["params"] = {"w": jnp.zeros((5, 8), jnp.float32),
+                     "b": state["params"]["b"]}
+    abstract = jax.tree.map(
+        lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype), bad)
+    with pytest.raises(ValueError, match="shape"):
+        restore_checkpoint(tmp_path / "step_00000001", abstract)
+
+
+# --- straggler monitor ---------------------------------------------------------
+
+
+def test_straggler_detection_with_fake_clock():
+    now = {"t": 0.0}
+    mon = StragglerMonitor(num_workers=4, predicted_step_s=1.0, slack=3.0,
+                           clock=lambda: now["t"])
+    for w in range(4):
+        mon.heartbeat(w, 0)
+    now["t"] = 2.0
+    for w in range(3):
+        mon.heartbeat(w, 1)
+    dec = mon.check()
+    assert dec.stragglers == [] and dec.failed == []
+    now["t"] = 4.0  # worker 3 idle 4s: > 3s deadline, < 5s fail line
+    for w in range(3):
+        mon.heartbeat(w, 2)
+    dec = mon.check()
+    assert dec.stragglers == [3] and dec.failed == []
+    now["t"] = 30.0
+    for w in range(3):
+        mon.heartbeat(w, 3)
+    dec = mon.check()
+    assert 3 in dec.failed
+    mon.remove(3)
+    assert mon.num_workers == 3
+
+
+def test_deadline_tightens_with_observations():
+    now = {"t": 0.0}
+    mon = StragglerMonitor(num_workers=1, predicted_step_s=0.1, slack=2.0,
+                           clock=lambda: now["t"])
+    base = mon.deadline_s()
+    assert base == pytest.approx(0.2)
+    for step in range(1, 12):
+        now["t"] += 0.5  # observed steps are slower than predicted
+        mon.heartbeat(0, step)
+    assert mon.deadline_s() == pytest.approx(1.0)  # median 0.5 x slack 2
+
+
+def test_ppt_predicted_deadline_integration():
+    """The monitor's prior comes straight from the roofline bound —
+    the paper's predict-before-running property feeding ops."""
+    from repro.analysis.roofline import Roofline
+
+    r = Roofline(arch="x", shape="train_4k", mesh="pod", kind="train",
+                 compute_s=0.4, memory_s=0.2, collective_s=0.1,
+                 model_flops_chip=1e12, hlo_flops_chip=2e12, chips=256)
+    mon = StragglerMonitor(num_workers=2,
+                           predicted_step_s=r.t_step_bound_s, slack=3.0,
+                           clock=lambda: 0.0)
+    assert mon.deadline_s() == pytest.approx(1.2)

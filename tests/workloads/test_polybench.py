@@ -1,0 +1,85 @@
+"""PolyBench workload suite: trace invariants + JAX kernel correctness."""
+from __future__ import annotations
+
+import jax
+import numpy as np
+import pytest
+
+from repro.workloads.polybench import MAKERS, all_workloads
+
+SMALL = {
+    "atx": dict(n=24), "bcg": dict(n=24), "mvt": dict(n=24),
+    "2mm": dict(n=12), "smm": dict(n=12),
+    "dgn": dict(nq=6, nr=6, npp=6), "dbn": dict(n=32), "grm": dict(n=12),
+    "lu": dict(n=16), "jcb": dict(n=16), "c2d": dict(n=16),
+    "adi": dict(n=12), "cov": dict(n=16), "blk": dict(num_options=64),
+}
+
+
+@pytest.mark.parametrize("abbr", sorted(MAKERS))
+def test_trace_wellformed(abbr):
+    w = MAKERS[abbr](**SMALL[abbr])
+    tr = w.trace()
+    assert len(tr) > 0
+    assert tr.addresses.min() > 0
+    assert tr.shared_mask.shape == tr.addresses.shape
+    # parallel-section workloads must expose shared (labeled) arrays
+    assert tr.shared_mask.any()
+    # op counts are positive and bytes follow loads+stores
+    assert w.op_counts.fp_ops > 0
+    assert w.op_counts.total_bytes == pytest.approx(
+        (w.op_counts.loads + w.op_counts.stores) * 8)
+
+
+@pytest.mark.parametrize("abbr", sorted(MAKERS))
+def test_trace_deterministic(abbr):
+    w = MAKERS[abbr](**SMALL[abbr])
+    t1, t2 = w.trace(), w.trace()
+    np.testing.assert_array_equal(t1.addresses, t2.addresses)
+
+
+def test_jax_kernels_match_numpy():
+    rng_key = jax.random.key(0)
+    # atax
+    w = MAKERS["atx"](n=24)
+    A, x = w.jax_args(rng_key)
+    np.testing.assert_allclose(
+        np.asarray(w.jax_fn(A, x)),
+        np.asarray(A).T @ (np.asarray(A) @ np.asarray(x)), rtol=2e-4)
+    # 2mm
+    w = MAKERS["2mm"](n=12)
+    A, B, C, D = w.jax_args(rng_key)
+    np.testing.assert_allclose(
+        np.asarray(w.jax_fn(A, B, C, D)),
+        1.5 * (np.asarray(A) @ np.asarray(B)) @ np.asarray(C)
+        + 1.2 * np.asarray(D), rtol=2e-4)
+    # covariance vs numpy
+    w = MAKERS["cov"](n=16)
+    (data,) = w.jax_args(rng_key)
+    np.testing.assert_allclose(
+        np.asarray(w.jax_fn(data)),
+        np.cov(np.asarray(data), rowvar=False), rtol=1e-3, atol=1e-4)
+
+
+def test_all_workloads_subset():
+    ws = all_workloads(["atx", "jcb"])
+    assert [w.abbr for w in ws] == ["atx", "jcb"]
+    assert len(all_workloads()) == 14  # Table 4 complete
+
+
+def test_predictor_end_to_end_on_atax():
+    """Full paper pipeline on one workload: trace -> mimic -> interleave
+    -> profiles -> SDCM -> runtime; prediction error vs exact sim within
+    a few % (the paper's Fig. 5 band)."""
+    from repro.core.predictor import PPTMulticorePredictor
+    from repro.hw.targets import HASWELL_I7_5960X
+
+    w = MAKERS["atx"](n=48)
+    tr = w.trace()
+    pred = PPTMulticorePredictor(HASWELL_I7_5960X)
+    rates, _, _ = pred.hit_rates(tr, 4)
+    exact = pred.ground_truth_hit_rates(tr, 4)
+    for lvl in rates:
+        assert abs(rates[lvl] - exact[lvl]) < 0.06, (lvl, rates, exact)
+    out = pred.predict(tr, 4, w.op_counts)
+    assert out.t_pred_s > 0
