@@ -1,74 +1,27 @@
-"""Shared benchmark machinery: profile caching + table formatting."""
+"""Shared benchmark machinery.
+
+Profile amortization is no longer benchmark-local: the old
+``ProfileCache`` is superseded by ``repro.api.Session``, whose
+content-hash artifact caches implement the same collect-once /
+predict-everything discipline for ALL callers.  Benchmarks construct
+one Session (batched SDCM backend) and issue declarative requests.
+"""
 from __future__ import annotations
 
 import json
 import time
 from pathlib import Path
 
-import numpy as np
-
-from repro.core.predictor import PPTMulticorePredictor
-from repro.core.reuse.distance import reuse_distances
-from repro.core.reuse.profile import profile_from_distances
-from repro.core.trace.interleave import interleave_traces
-from repro.core.trace.mimic import gen_private_traces
+from repro.api import AnalyticalSDCM, Session
 
 RESULTS_DIR = Path(__file__).resolve().parents[1] / "experiments" / "results"
+REPO_ROOT = Path(__file__).resolve().parents[1]
 
 
-class ProfileCache:
-    """Reuse profiles are a function of (workload, cores, strategy, line)
-    only — identical across the three CPU targets (64 B lines), so the
-    expensive Fenwick pass runs once per key.  This is the paper's own
-    amortization argument (collect once, predict everything)."""
-
-    def __init__(self):
-        self.traces: dict[str, object] = {}
-        self.profiles: dict[tuple, tuple] = {}
-        self.mimicked: dict[tuple, tuple] = {}
-
-    def trace(self, workload):
-        if workload.abbr not in self.traces:
-            self.traces[workload.abbr] = workload.trace()
-        return self.traces[workload.abbr]
-
-    def traces_for(self, workload, cores: int, strategy: str, seed: int = 0):
-        key = (workload.abbr, cores, strategy, seed)
-        if key not in self.mimicked:
-            tr = self.trace(workload)
-            if cores == 1:
-                self.mimicked[key] = ([tr], tr)
-            else:
-                privs = gen_private_traces(tr, cores)
-                shared = interleave_traces(privs, strategy, seed=seed)
-                self.mimicked[key] = (privs, shared)
-        return self.mimicked[key]
-
-    def profiles_for(self, workload, cores: int, strategy: str,
-                     line: int = 64, seed: int = 0):
-        key = (workload.abbr, cores, strategy, line, seed)
-        if key not in self.profiles:
-            privs, shared = self.traces_for(workload, cores, strategy, seed)
-            prd = profile_from_distances(
-                reuse_distances(privs[0].addresses, line))
-            crd = (prd if cores == 1 else profile_from_distances(
-                reuse_distances(shared.addresses, line)))
-            self.profiles[key] = (prd, crd)
-        return self.profiles[key]
-
-
-def hit_rates_from_profiles(target, prd, crd):
-    """SDCM per level using the cached profiles (predictor logic,
-    minus the re-tracing)."""
-    from repro.core import sdcm
-
-    shared_idx = target.shared_level % len(target.levels)
-    rates = {}
-    for i, lvl in enumerate(target.levels):
-        prof = crd if i >= shared_idx else prd
-        rates[lvl.name] = sdcm.hit_rate(prof, lvl.effective_assoc,
-                                        lvl.num_lines)
-    return rates
+def make_session(batched: bool = True) -> Session:
+    """The benchmark Session: batched JAX SDCM over the whole grid."""
+    backend = "batched" if batched else "numpy"
+    return Session(cache_model=AnalyticalSDCM(backend=backend))
 
 
 def save_json(name: str, payload) -> Path:

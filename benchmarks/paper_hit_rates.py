@@ -2,17 +2,17 @@
 simulation (the PAPI stand-in), per CPU target x core count x level.
 
 Paper's claim: 1.23% overall average error (with known weak spots:
-gramschmidt & symm L2).  This benchmark reproduces the comparison and
-reports the same aggregate.
+gramschmidt & symm L2).  This benchmark reproduces the comparison
+through `repro.api`: one Session, one declarative request per
+workload, the analytical grid evaluated by the batched SDCM kernel and
+the ground truth by the ExactLRU stage over the SAME cached artifacts.
 """
 from __future__ import annotations
 
 import numpy as np
 
-from benchmarks.common import (
-    ProfileCache, fmt_table, hit_rates_from_profiles, save_json,
-)
-from repro.core.cachesim import simulate_hierarchy
+from benchmarks.common import fmt_table, make_session, save_json
+from repro.api import PredictionRequest
 from repro.hw.targets import CPU_TARGETS
 from repro.workloads.polybench import all_workloads
 
@@ -21,54 +21,41 @@ QUICK_CORES = [1, 4]
 FULL_CORES = [1, 2, 4, 8, 16]
 
 
-def exact_hit_rates(target, privs, shared):
-    shared_idx = target.shared_level % len(target.levels)
-    out = {}
-    if len(privs) == 1:
-        res = simulate_hierarchy(privs[0].addresses, list(target.levels))
-        return {r.name: r.cumulative_hit_rate for r in res}
-    res_priv = simulate_hierarchy(
-        privs[0].addresses, list(target.levels[:shared_idx]))
-    for r in res_priv:
-        out[r.name] = r.cumulative_hit_rate
-    res_shared = simulate_hierarchy(shared.addresses, list(target.levels))
-    for r, lvl in zip(res_shared, target.levels):
-        out.setdefault(lvl.name, r.cumulative_hit_rate)
-    return out
-
-
 def run(quick: bool = True, strategy: str = "round_robin") -> dict:
     workloads = all_workloads(QUICK_SUBSET if quick else None)
     cores_list = QUICK_CORES if quick else FULL_CORES
-    cache = ProfileCache()
+    session = make_session()
     rows, records = [], []
     errors = []
     per_level_err: dict[str, list] = {}
 
-    for target in CPU_TARGETS.values():
-        for w in workloads:
-            for cores in cores_list:
-                if cores > target.cores:
-                    continue
-                prd, crd = cache.profiles_for(w, cores, strategy,
-                                              target.levels[0].line_size)
-                pred = hit_rates_from_profiles(target, prd, crd)
-                privs, shared = cache.traces_for(w, cores, strategy)
-                exact = exact_hit_rates(target, privs, shared)
-                for lvl in pred:
-                    err = abs(pred[lvl] - exact[lvl]) * 100
-                    errors.append(err)
-                    per_level_err.setdefault(lvl, []).append(err)
-                    records.append({
-                        "target": target.name, "workload": w.abbr,
-                        "cores": cores, "level": lvl,
-                        "predicted": pred[lvl], "exact": exact[lvl],
-                        "abs_err_pct": err,
-                    })
-                rows.append([
-                    target.name, w.abbr, cores,
-                    *(f"{pred[l]:.4f}/{exact[l]:.4f}" for l in pred),
-                ])
+    for w in workloads:
+        request = PredictionRequest(
+            targets=tuple(CPU_TARGETS),
+            core_counts=tuple(cores_list),
+            strategies=(strategy,),
+        )
+        predset = session.predict(w, request)
+        for cell in predset:
+            target = CPU_TARGETS[cell.target]
+            exact = session.ground_truth_hit_rates(
+                w, target, cell.cores, strategy=cell.strategy
+            )
+            for lvl in cell.hit_rates:
+                err = abs(cell.hit_rates[lvl] - exact[lvl]) * 100
+                errors.append(err)
+                per_level_err.setdefault(lvl, []).append(err)
+                records.append({
+                    "target": cell.target, "workload": w.abbr,
+                    "cores": cell.cores, "level": lvl,
+                    "predicted": cell.hit_rates[lvl], "exact": exact[lvl],
+                    "abs_err_pct": err,
+                })
+            rows.append([
+                cell.target, w.abbr, cell.cores,
+                *(f"{cell.hit_rates[l]:.4f}/{exact[l]:.4f}"
+                  for l in cell.hit_rates),
+            ])
 
     overall = float(np.mean(errors))
     headers = ["target", "app", "cores"] + [
@@ -82,6 +69,8 @@ def run(quick: bool = True, strategy: str = "round_robin") -> dict:
         },
         "paper_claim_pct": 1.23,
         "strategy": strategy,
+        "profile_builds": session.stats.profile_builds,
+        "profile_cache_hits": session.stats.profile_hits,
         "records": records,
     }
     save_json("paper_hit_rates" + ("_quick" if quick else ""), summary)
@@ -90,6 +79,8 @@ def run(quick: bool = True, strategy: str = "round_robin") -> dict:
           f"(paper's PAPI-vs-SDCM claim: 1.23%)")
     for k, v in summary["per_level_avg_err_pct"].items():
         print(f"  {k}: {v:.2f}%")
+    print(f"artifact cache: {session.stats.profile_builds} profile builds, "
+          f"{session.stats.profile_hits} hits")
     return summary
 
 

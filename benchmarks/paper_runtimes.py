@@ -3,9 +3,11 @@
 No real multicore exists in this container, so the ground truth is the
 same analytical chain evaluated with *exact* (simulated-LRU) hit rates
 — the error isolates the SDCM approximation, which is the paper's
-modeling contribution.  A secondary absolute anchor measures the JAX
-kernel wall-clock at 1 core (reported, not scored: XLA-vectorized
-kernels are not the paper's -O2 scalar loops; DESIGN.md §7).
+modeling contribution.  Both sides run through `repro.api`: the
+predicted grid via one request per workload (batched SDCM), the exact
+side via the ExactLRU stage + the same EqRuntimeModel, on artifacts
+the Session computes once.  A secondary absolute anchor measures the
+JAX kernel wall-clock at 1 core (reported, not scored; DESIGN.md §7).
 """
 from __future__ import annotations
 
@@ -13,11 +15,8 @@ import time
 
 import numpy as np
 
-from benchmarks.common import (
-    ProfileCache, fmt_table, hit_rates_from_profiles, save_json,
-)
-from benchmarks.paper_hit_rates import exact_hit_rates
-from repro.core.runtime_model import predict_runtime_s
+from benchmarks.common import fmt_table, make_session, save_json
+from repro.api import EqRuntimeModel, PredictionRequest
 from repro.hw.targets import CPU_TARGETS
 from repro.workloads.polybench import all_workloads
 
@@ -42,43 +41,43 @@ def wallclock_anchor(w, repeats: int = 5) -> float | None:
 def run(quick: bool = True, strategy: str = "round_robin") -> dict:
     workloads = all_workloads(QUICK_SUBSET if quick else None)
     cores_list = [1, 4] if quick else [1, 2, 4, 8, 16]
-    cache = ProfileCache()
+    session = make_session()
+    runtime_model = EqRuntimeModel()
     rows, records, errs = [], [], []
 
-    for target in CPU_TARGETS.values():
-        for w in workloads:
-            for cores in cores_list:
-                if cores > target.cores:
-                    continue
-                prd, crd = cache.profiles_for(w, cores, strategy,
-                                              target.levels[0].line_size)
-                pred_rates = hit_rates_from_profiles(target, prd, crd)
-                privs, shared = cache.traces_for(w, cores, strategy)
-                exact_rates = exact_hit_rates(target, privs, shared)
-                order = [l.name for l in target.levels]
-                t_pred = predict_runtime_s(
-                    target, [pred_rates[l] for l in order], w.op_counts,
-                    cores)
-                t_true = predict_runtime_s(
-                    target, [exact_rates[l] for l in order], w.op_counts,
-                    cores)
-                err = (abs(t_pred["t_pred_s"] - t_true["t_pred_s"])
-                       / max(t_true["t_pred_s"], 1e-12) * 100)
-                errs.append(err)
-                records.append({
-                    "target": target.name, "workload": w.abbr,
-                    "cores": cores,
-                    "t_pred_s": t_pred["t_pred_s"],
-                    "t_exact_rates_s": t_true["t_pred_s"],
-                    "t_mem_s": t_pred["t_mem_s"],
-                    "t_cpu_s": t_pred["t_cpu_s"],
-                    "rel_err_pct": err,
-                })
-                rows.append([
-                    target.name, w.abbr, cores,
-                    f"{t_pred['t_pred_s']:.3e}",
-                    f"{t_true['t_pred_s']:.3e}", f"{err:.2f}%",
-                ])
+    for w in workloads:
+        request = PredictionRequest(
+            targets=tuple(CPU_TARGETS),
+            core_counts=tuple(cores_list),
+            strategies=(strategy,),
+            counts=w.op_counts,
+        )
+        predset = session.predict(w, request)
+        for cell in predset:
+            target = CPU_TARGETS[cell.target]
+            exact_rates = session.ground_truth_hit_rates(
+                w, target, cell.cores, strategy=cell.strategy
+            )
+            t_true = runtime_model.runtime(
+                target, exact_rates, w.op_counts, cell.cores
+            )
+            err = (abs(cell.t_pred_s - t_true["t_pred_s"])
+                   / max(t_true["t_pred_s"], 1e-12) * 100)
+            errs.append(err)
+            records.append({
+                "target": cell.target, "workload": w.abbr,
+                "cores": cell.cores,
+                "t_pred_s": cell.t_pred_s,
+                "t_exact_rates_s": t_true["t_pred_s"],
+                "t_mem_s": cell.t_mem_s,
+                "t_cpu_s": cell.t_cpu_s,
+                "rel_err_pct": err,
+            })
+            rows.append([
+                cell.target, w.abbr, cell.cores,
+                f"{cell.t_pred_s:.3e}",
+                f"{t_true['t_pred_s']:.3e}", f"{err:.2f}%",
+            ])
 
     anchors = {}
     for w in workloads:
@@ -97,6 +96,8 @@ def run(quick: bool = True, strategy: str = "round_robin") -> dict:
         "overall_avg_rel_err_pct": overall,
         "paper_claim_pct": 9.08,
         "wallclock_anchors_s": anchors,
+        "profile_builds": session.stats.profile_builds,
+        "profile_cache_hits": session.stats.profile_hits,
         "records": records,
     }
     save_json("paper_runtimes" + ("_quick" if quick else ""), summary)

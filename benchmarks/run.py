@@ -1,11 +1,15 @@
 """Benchmark orchestrator — one module per paper table/figure.
 
-    PYTHONPATH=src python -m benchmarks.run [--full]
+    PYTHONPATH=src python -m benchmarks.run [--full | --smoke]
 
 * paper_hit_rates  — Figs. 5-6 analog (SDCM vs exact LRU, 3 CPU targets)
 * paper_runtimes   — Figs. 8-10 analog (Eq. 4-7 vs exact-rate runtimes)
 * reuse_throughput — §3.3.1 (tree vs stack reuse-profile throughput)
+  + the Session-vs-legacy grid timing (BENCH_api_grid.json)
 * roofline_table   — §Roofline (the cell table from the dry-run records)
+
+``--smoke`` runs a minimal Session grid + the api-grid timing only —
+the CI sanity job.
 """
 from __future__ import annotations
 
@@ -13,8 +17,35 @@ import sys
 import time
 
 
+def smoke() -> int:
+    """CI smoke: tiny end-to-end grid through repro.api + grid timing."""
+    from benchmarks.reuse_throughput import api_grid_benchmark
+    from repro.api import PredictionRequest, Session
+    from repro.hw.targets import CPU_TARGETS
+    from repro.workloads.polybench import make_atax
+
+    w = make_atax(n=32)
+    session = Session()
+    result = session.predict(
+        w,
+        PredictionRequest(
+            targets=tuple(CPU_TARGETS) + ("tpu-v5e",),
+            core_counts=(1, 2, 4),
+            counts=w.op_counts,
+        ),
+    )
+    print(result.to_table())
+    assert len(result) == 12 and all(p.t_pred_s > 0 for p in result)
+    grid = api_grid_benchmark(n=32, core_counts=(1, 2, 4))
+    assert grid["speedup"] > 1.0, grid
+    print("SMOKE-OK")
+    return 0
+
+
 def main(argv=None) -> int:
     argv = sys.argv[1:] if argv is None else argv
+    if "--smoke" in argv:
+        return smoke()
     quick = "--full" not in argv
     t0 = time.time()
     print("=" * 72)

@@ -1,13 +1,15 @@
-"""Quickstart: the paper's pipeline end-to-end in ~40 lines.
+"""Quickstart: the paper's pipeline end-to-end through `repro.api`.
 
 One sequential trace of a parallel kernel (ATAX) in; cache hit rates
-and runtimes for EVERY core count out — without re-tracing.  This is
-PPT-Multicore's headline property (§1: "predictions for various core
-counts without having to rerun the application").
+and runtimes for EVERY (target x core count) cell out — without
+re-tracing.  This is PPT-Multicore's headline property (§1:
+"predictions for various core counts without having to rerun the
+application"), and the Session makes it an API invariant: each reuse
+profile is computed exactly once across the whole grid.
 
     PYTHONPATH=src python examples/quickstart.py
 """
-from repro.core.predictor import PPTMulticorePredictor
+from repro.api import PredictionRequest, Session
 from repro.hw.targets import CPU_TARGETS
 from repro.workloads.polybench import make_atax
 
@@ -18,24 +20,26 @@ trace = workload.trace()
 print(f"traced {workload.name}: {len(trace):,} refs, "
       f"{trace.shared_mask.mean():.0%} shared")
 
-# 2. Predict hit rates + runtime for every target and core count from
-#    that single trace.
-for target in CPU_TARGETS.values():
-    print(f"\n=== {target.name} ({target.microarch}) ===")
-    predictor = PPTMulticorePredictor(target)
-    for cores in (1, 2, 4, 8):
-        if cores > target.cores:
-            continue
-        pred = predictor.predict(trace, cores, workload.op_counts)
-        rates = "  ".join(
-            f"{k}={v:.3f}" for k, v in pred.hit_rates.items())
-        print(f"  {cores} cores: {rates}  T_pred={pred.t_pred_s * 1e3:.2f} ms")
+# 2. One declarative request: every target x core count from that
+#    single trace, executed by a caching Session.
+session = Session()
+request = PredictionRequest(
+    targets=tuple(CPU_TARGETS),          # registry names work too
+    core_counts=(1, 2, 4, 8),
+    counts=workload.op_counts,
+)
+result = session.predict(trace, request)
+print()
+print(result.to_table())
+print(f"\nartifact cache: {session.stats.profile_builds} profile builds, "
+      f"{session.stats.profile_hits} cache hits across "
+      f"{len(result)} grid cells")
 
-# 3. Validate one point against the exact LRU simulator (PAPI stand-in).
+# 3. Validate one point against the exact LRU simulator (PAPI stand-in)
+#    — the ground-truth model runs through the same stage interface.
 target = next(iter(CPU_TARGETS.values()))
-predictor = PPTMulticorePredictor(target)
-pred, _, _ = predictor.hit_rates(trace, 4)
-exact = predictor.ground_truth_hit_rates(trace, 4)
+pred = result.one(target=target.name, cores=4).hit_rates
+exact = session.ground_truth_hit_rates(trace, target, 4)
 print(f"\nSDCM vs exact LRU on {target.name} @4 cores:")
 for lvl in pred:
     print(f"  {lvl}: predicted {pred[lvl]:.4f}  exact {exact[lvl]:.4f}  "

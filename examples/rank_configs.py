@@ -1,38 +1,64 @@
 """Example 4 — the paper's technique as a first-class framework
-feature: rank candidate configurations *before compiling them*.
+feature: rank candidate configurations *before running them*.
 
 PPT-Multicore's selling point is pricing core counts / cache designs
-from one trace.  Translated to this framework: price (arch x shape)
-cells from the dry-run artifacts — three roofline terms + the reuse-
-profile VMEM refinement — and rank the bottlenecks, without any new
-compile.
+from one trace.  With `repro.api` that is one declarative request: the
+Session executes the whole (target x cores x strategy) grid off a
+single ATAX trace — each profile computed once — and the cells rank by
+predicted runtime.  When dry-run artifacts exist, the TPU roofline
+ranking (arch x shape cells) is printed as well.
 
     PYTHONPATH=src python examples/rank_configs.py
 """
 import sys
 from pathlib import Path
 
+from repro.api import PredictionRequest, Session
+from repro.hw.targets import CPU_TARGETS
+from repro.workloads.polybench import make_atax
+
+workload = make_atax(n=96)
+session = Session()
+request = PredictionRequest(
+    targets=tuple(CPU_TARGETS),
+    core_counts=(1, 2, 4, 8, 16),
+    strategies=("round_robin", "uniform"),
+    counts=workload.op_counts,
+)
+result = session.predict(workload, request)
+
+cells = sorted(result, key=lambda p: p.t_pred_s)
+print(f"{len(cells)} predicted cells for {workload.name}, ranked "
+      f"best-first by T_pred (one trace, zero reruns):\n")
+print(f"{'target':<17} {'cores':>5} {'strategy':<12} "
+      f"{'LLC P(h)':>9} {'T_pred':>11}")
+for p in cells:
+    llc = list(p.hit_rates.values())[-1]
+    print(f"{p.target:<17} {p.cores:>5} {p.strategy:<12} "
+          f"{llc:>9.4f} {p.t_pred_s:>10.3e}s")
+
+best, worst = cells[0], cells[-1]
+print(f"\npick: {best.target} @ {best.cores} cores ({best.strategy}) — "
+      f"{worst.t_pred_s / best.t_pred_s:.1f}x faster than the worst cell; "
+      f"{session.stats.profile_builds} profile builds served "
+      f"{len(cells)} cells")
+
+# --- optional: TPU roofline ranking from dry-run records --------------------
 sys.path.insert(0, str(Path(__file__).resolve().parents[1]))  # benchmarks/
 from benchmarks.roofline_table import load_records, roofline_from_record
 
 records = [r for r in load_records("pod") if r["status"] == "ok"]
 if not records:
-    raise SystemExit(
-        "no dry-run records; run: PYTHONPATH=src python -m "
-        "repro.launch.dryrun --all --mesh pod")
+    print("\n(no dry-run records; for the TPU roofline ranking run: "
+          "PYTHONPATH=src python -m repro.launch.dryrun --all --mesh pod)")
+    raise SystemExit(0)
 
 rows = [roofline_from_record(r) for r in records]
 rows.sort(key=lambda r: r.roofline_fraction)
-
-print(f"{len(rows)} compiled cells, ranked worst-first by roofline "
+print(f"\n{len(rows)} compiled TPU cells, ranked worst-first by roofline "
       f"fraction:\n")
 print(f"{'cell':<38} {'bound':<11} {'t_bound':>9} {'roofl%':>7}")
 for r in rows:
     cell = f"{r.arch} x {r.shape}"
     print(f"{cell:<38} {r.bottleneck:<11} {r.t_step_bound_s:>8.4f}s "
           f"{100 * r.roofline_fraction:>6.1f}%")
-
-worst = rows[0]
-coll = max(rows, key=lambda r: r.collective_s / max(r.t_step_bound_s, 1e-12))
-print(f"\nhillclimb picks -> worst fraction: {worst.arch} x {worst.shape}; "
-      f"most collective-bound: {coll.arch} x {coll.shape}")

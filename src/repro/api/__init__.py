@@ -1,0 +1,58 @@
+"""repro.api — the unified prediction pipeline.
+
+    from repro.api import PredictionRequest, Session
+
+    session = Session()
+    request = PredictionRequest(
+        targets=("i7-5960X", "Xeon E5-2699 v4", "EPYC 7702P"),
+        core_counts=(1, 2, 4, 8),
+        counts=workload.op_counts,
+    )
+    result = session.predict(workload, request)
+    print(result.to_table())
+
+One trace in; the whole (target x cores x strategy x mode) grid out,
+with every reuse profile computed exactly once (``session.stats``).
+The legacy ``repro.core.predictor.PPTMulticorePredictor`` is a
+deprecated shim over this package (docs/api_migration.md).
+"""
+from repro.api.request import GridCell, PredictionRequest
+from repro.api.results import CellPrediction, PredictionSet
+from repro.api.session import Session, SessionStats
+from repro.api.stages import (
+    AnalyticalSDCM,
+    ArrayTraceSource,
+    CacheModel,
+    EqRuntimeModel,
+    ExactLRU,
+    MimicProfileBuilder,
+    ProfileArtifacts,
+    ProfileBuilder,
+    RooflineRuntimeModel,
+    RuntimeModel,
+    Target,
+    TraceSource,
+    trace_content_id,
+)
+
+__all__ = [
+    "AnalyticalSDCM",
+    "ArrayTraceSource",
+    "CacheModel",
+    "CellPrediction",
+    "EqRuntimeModel",
+    "ExactLRU",
+    "GridCell",
+    "MimicProfileBuilder",
+    "PredictionRequest",
+    "PredictionSet",
+    "ProfileArtifacts",
+    "ProfileBuilder",
+    "RooflineRuntimeModel",
+    "RuntimeModel",
+    "Session",
+    "SessionStats",
+    "Target",
+    "TraceSource",
+    "trace_content_id",
+]

@@ -1,0 +1,257 @@
+"""Session: executes PredictionRequests with content-hash artifact
+caching.
+
+The paper's headline property — "predictions for various core counts
+without having to rerun the application" — becomes an invariant here:
+one trace is loaded once, and every derived artifact is cached under
+content-hash keys
+
+    reuse distances       (trace_id, line_size)
+    mimicked privates     (trace_id, cores)
+    interleaved shared    (trace_id, cores, strategy, seed)
+    PRD/CRD profiles      (trace_id, line_size, cores, strategy, seed)
+
+so a full (target x core-count x strategy) sweep computes each profile
+exactly once across ALL targets (the three Table-5 CPUs share 64-byte
+lines; the TPU's 512-byte VMEM granule adds one more profile set, not
+a new pipeline).  ``Session.stats`` exposes build/hit counters — tests
+assert the compute-once property instead of trusting it.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+from repro.api.request import PredictionRequest
+from repro.api.results import CellPrediction, PredictionSet
+from repro.api.stages import (
+    AnalyticalSDCM,
+    ExactLRU,
+    MimicProfileBuilder,
+    ProfileArtifacts,
+    as_trace_source,
+    default_runtime_model,
+    trace_content_id,
+)
+from repro.core.reuse.profile import profile_from_distances
+from repro.core.trace.types import LabeledTrace
+from repro.hw.targets import resolve_target
+
+
+@dataclasses.dataclass
+class SessionStats:
+    """Observable cache behaviour (asserted by tests/benchmarks)."""
+
+    trace_builds: int = 0
+    rd_builds: int = 0
+    mimic_builds: int = 0
+    interleave_builds: int = 0
+    profile_builds: int = 0
+    profile_hits: int = 0
+
+    def reset(self) -> None:
+        for f in dataclasses.fields(self):
+            setattr(self, f.name, 0)
+
+
+class Session:
+    """Cached executor for :class:`PredictionRequest` grids.
+
+    Stages are injectable: pass a different ``cache_model`` (e.g.
+    :class:`repro.api.stages.ExactLRU`) or ``profile_builder`` and the
+    same request produces ground-truth or alternative-model grids.
+    ``cache=False`` disables artifact reuse (the legacy per-call cost
+    model — used by the deprecated shim and the benchmark baseline).
+    """
+
+    def __init__(
+        self,
+        *,
+        profile_builder=None,
+        cache_model=None,
+        runtime_model=None,
+        cache: bool = True,
+    ):
+        self.builder = profile_builder or MimicProfileBuilder()
+        self.cache_model = cache_model or AnalyticalSDCM()
+        self.runtime_model = runtime_model  # None -> per-target default
+        self.cache_enabled = cache
+        self.stats = SessionStats()
+        self._trace_ids: dict[int, str] = {}       # id(source) -> trace_id
+        # pins every cached source: id() keys are only valid while the
+        # object is alive, so a recycled address must never hit the map
+        self._sources: dict[int, object] = {}
+        self._traces: dict[str, LabeledTrace] = {}
+        self._rd: dict = {}
+        self._privates: dict = {}
+        self._shared: dict = {}
+        self._profiles: dict = {}
+
+    # --- artifact construction (each key computed exactly once) -----------
+
+    def load(self, source) -> tuple[str, LabeledTrace]:
+        """Coerce + trace + content-hash a source (cached).
+
+        With caching disabled the content hash is skipped (nothing is
+        keyed on it) — the deprecated shim must not pay O(N) hashing
+        the legacy predictor never did.
+        """
+        sid = id(source)  # the caller's object, not the coercion wrapper
+        if self.cache_enabled and sid in self._trace_ids:
+            tid = self._trace_ids[sid]
+            return tid, self._traces[tid]
+        trace = as_trace_source(source).trace()
+        self.stats.trace_builds += 1
+        if not self.cache_enabled:
+            return "", trace
+        tid = trace_content_id(trace)
+        self._trace_ids[sid] = tid
+        self._sources[sid] = source
+        self._traces.setdefault(tid, trace)
+        return tid, trace
+
+    def _reuse_distances(self, tid: str, trace: LabeledTrace, line: int):
+        key = (tid, line)
+        if self.cache_enabled and key in self._rd:
+            return self._rd[key]
+        from repro.core.reuse.distance import reuse_distances
+
+        self.stats.rd_builds += 1
+        rd = reuse_distances(trace.addresses, line)
+        if self.cache_enabled:
+            self._rd[key] = rd
+        return rd
+
+    def _private_traces(self, tid: str, trace: LabeledTrace, cores: int):
+        if cores == 1:
+            return [trace]
+        key = (tid, cores)
+        if self.cache_enabled and key in self._privates:
+            return self._privates[key]
+        self.stats.mimic_builds += 1
+        privs = self.builder.private_traces(trace, cores)
+        if self.cache_enabled:
+            self._privates[key] = privs
+        return privs
+
+    def _shared_trace(self, tid: str, privs, cores: int, strategy: str,
+                      seed: int):
+        key = (tid, cores, strategy, seed)
+        if self.cache_enabled and key in self._shared:
+            return self._shared[key]
+        self.stats.interleave_builds += 1
+        shared = self.builder.interleave(privs, strategy, seed)
+        if self.cache_enabled:
+            self._shared[key] = shared
+        return shared
+
+    def artifacts(self, source, cores: int, *, strategy: str = "round_robin",
+                  seed: int = 0, line_size: int = 64) -> ProfileArtifacts:
+        """PRD/CRD profiles (+ underlying traces) for one grid cell."""
+        tid, trace = self.load(source)
+        key = (tid, line_size, cores, strategy, seed)
+        if self.cache_enabled and key in self._profiles:
+            self.stats.profile_hits += 1
+            return self._profiles[key]
+        if cores == 1:
+            prof = profile_from_distances(
+                self._reuse_distances(tid, trace, line_size)
+            )
+            art = ProfileArtifacts(
+                trace_id=tid, cores=1, strategy=strategy, seed=seed,
+                line_size=line_size, privates=[trace], shared=trace,
+                prd=prof, crd=prof,
+            )
+        else:
+            privs = self._private_traces(tid, trace, cores)
+            shared = self._shared_trace(tid, privs, cores, strategy, seed)
+            # PRD of the master core (cores are symmetric by construction)
+            prd = self.builder.profile(privs[0], line_size)
+            crd = self.builder.profile(shared, line_size)
+            art = ProfileArtifacts(
+                trace_id=tid, cores=cores, strategy=strategy, seed=seed,
+                line_size=line_size, privates=privs, shared=shared,
+                prd=prd, crd=crd,
+            )
+        self.stats.profile_builds += 1
+        if self.cache_enabled:
+            self._profiles[key] = art
+        return art
+
+    # --- execution --------------------------------------------------------
+
+    def predict(self, source, request: PredictionRequest) -> PredictionSet:
+        """Execute the full grid; hit rates evaluated in one batched
+        call when the cache model supports grids."""
+        tid, _trace = self.load(source)
+        cells = list(request.cells())
+        if not cells:
+            raise ValueError(
+                f"request matched no grid cells: {request.describe()}"
+            )
+        arts = [
+            self.artifacts(
+                source, cell.cores, strategy=cell.strategy,
+                seed=request.seed,
+                line_size=cell.target.levels[0].line_size,
+            )
+            for cell in cells
+        ]
+        items = [(cell.target, art) for cell, art in zip(cells, arts)]
+        if hasattr(self.cache_model, "hit_rates_grid"):
+            rate_dicts = self.cache_model.hit_rates_grid(items)
+        else:
+            rate_dicts = [
+                self.cache_model.hit_rates(t, a) for t, a in items
+            ]
+
+        predictions = []
+        for cell, art, rates in zip(cells, arts, rate_dicts):
+            timing = {}
+            if request.counts is not None:
+                rt = self.runtime_model or default_runtime_model(cell.target)
+                timing = rt.runtime(
+                    cell.target, rates, request.counts, cell.cores,
+                    mode=cell.mode, gap_bytes=request.gap_bytes,
+                )
+            predictions.append(
+                CellPrediction(
+                    target=cell.target.name,
+                    cores=cell.cores,
+                    strategy=cell.strategy,
+                    mode=cell.mode,
+                    hit_rates=rates,
+                    t_pred_s=timing.get("t_pred_s"),
+                    t_mem_s=timing.get("t_mem_s"),
+                    t_cpu_s=timing.get("t_cpu_s"),
+                    private_profile=art.prd if request.keep_profiles else None,
+                    shared_profile=art.crd if request.keep_profiles else None,
+                )
+            )
+        return PredictionSet(
+            predictions,
+            cache_model=getattr(self.cache_model, "name", "custom"),
+            trace_id=tid,
+        )
+
+    # --- single-cell conveniences ----------------------------------------
+
+    def hit_rates(self, source, target, cores: int, *,
+                  strategy: str = "round_robin", seed: int = 0
+                  ) -> dict[str, float]:
+        target = resolve_target(target)
+        art = self.artifacts(
+            source, cores, strategy=strategy, seed=seed,
+            line_size=target.levels[0].line_size,
+        )
+        return self.cache_model.hit_rates(target, art)
+
+    def ground_truth_hit_rates(self, source, target, cores: int, *,
+                               strategy: str = "round_robin", seed: int = 0
+                               ) -> dict[str, float]:
+        """Exact-LRU simulation through the same stage interface."""
+        target = resolve_target(target)
+        art = self.artifacts(
+            source, cores, strategy=strategy, seed=seed,
+            line_size=target.levels[0].line_size,
+        )
+        return ExactLRU().hit_rates(target, art)

@@ -1,0 +1,275 @@
+"""Pluggable pipeline stages (paper Fig. 1, made first-class).
+
+The prediction pipeline is four swappable stages behind protocols:
+
+    TraceSource   -> one labeled sequential trace (+ stable content id)
+    ProfileBuilder-> PRD/CRD reuse profiles for (cores, strategy, seed)
+    CacheModel    -> per-level hit rates from the profile artifacts
+    RuntimeModel  -> T_pred from hit rates + op counts (Eq. 4-7 or
+                     a roofline for accelerator targets)
+
+Both the analytical SDCM and the exact-LRU simulator implement
+``CacheModel``, so a benchmark comparing prediction against ground
+truth is two models run through one :class:`repro.api.Session` — and
+the TPU's VMEM level goes through the SAME SDCM path as the CPU
+hierarchies (``TPUTarget.levels`` is one fully-associative level).
+"""
+from __future__ import annotations
+
+import hashlib
+from dataclasses import dataclass, field
+from typing import Protocol, runtime_checkable
+
+import numpy as np
+
+from repro.core import sdcm
+from repro.core.cachesim import simulate_hierarchy
+from repro.core.levels import CacheLevelConfig
+from repro.core.reuse.distance import reuse_distances
+from repro.core.reuse.profile import ReuseProfile, profile_from_distances
+from repro.core.runtime_model import OpCounts, predict_runtime_s
+from repro.core.trace.interleave import interleave_traces
+from repro.core.trace.mimic import gen_private_traces
+from repro.core.trace.types import LabeledTrace
+
+
+# --- targets -----------------------------------------------------------------
+
+
+@runtime_checkable
+class Target(Protocol):
+    """Anything with a cache hierarchy: CPUTarget and TPUTarget both
+    satisfy this structurally — there is no accelerator-specific fork
+    in the pipeline."""
+
+    name: str
+
+    @property
+    def levels(self) -> tuple[CacheLevelConfig, ...]: ...
+
+
+def shared_level_index(target) -> int:
+    return getattr(target, "shared_level", -1) % len(target.levels)
+
+
+# --- trace sources -----------------------------------------------------------
+
+
+@runtime_checkable
+class TraceSource(Protocol):
+    """Stage 1: produce the labeled sequential trace once."""
+
+    def trace(self) -> LabeledTrace: ...
+
+
+def trace_content_id(trace: LabeledTrace) -> str:
+    """Stable content hash of a trace — the artifact-cache key root."""
+    h = hashlib.sha1()
+    h.update(np.ascontiguousarray(trace.addresses).tobytes())
+    h.update(np.ascontiguousarray(trace.bb_ids).tobytes())
+    h.update(np.ascontiguousarray(trace.shared_mask).tobytes())
+    return h.hexdigest()[:16]
+
+
+@dataclass
+class ArrayTraceSource:
+    """Wrap an in-memory trace as a TraceSource."""
+
+    _trace: LabeledTrace
+    name: str = "trace"
+
+    def trace(self) -> LabeledTrace:
+        return self._trace
+
+
+def as_trace_source(obj) -> TraceSource:
+    """Coerce a LabeledTrace / Workload / TraceSource uniformly."""
+    if isinstance(obj, LabeledTrace):
+        return ArrayTraceSource(obj)
+    if hasattr(obj, "trace") and callable(obj.trace):
+        return obj  # Workload and any TraceSource qualify
+    raise TypeError(f"cannot interpret {type(obj).__name__} as a TraceSource")
+
+
+# --- profile artifacts -------------------------------------------------------
+
+
+@dataclass
+class ProfileArtifacts:
+    """Everything derived from one (trace, cores, strategy, seed, line)
+    cell — cached by Session so it is computed exactly once."""
+
+    trace_id: str
+    cores: int
+    strategy: str
+    seed: int
+    line_size: int
+    privates: list[LabeledTrace]
+    shared: LabeledTrace
+    prd: ReuseProfile
+    crd: ReuseProfile
+
+
+class ProfileBuilder(Protocol):
+    """Stage 2: trace -> mimicked traces -> PRD/CRD profiles."""
+
+    def private_traces(
+        self, trace: LabeledTrace, cores: int
+    ) -> list[LabeledTrace]: ...
+
+    def interleave(
+        self, privates: list[LabeledTrace], strategy: str, seed: int
+    ) -> LabeledTrace: ...
+
+    def profile(self, trace: LabeledTrace, line_size: int) -> ReuseProfile: ...
+
+
+class MimicProfileBuilder:
+    """Default builder: Algorithm 1 + Algorithm 2 + the Fenwick-tree
+    reuse-distance pass, exactly the paper's pipeline."""
+
+    def private_traces(self, trace, cores):
+        return gen_private_traces(trace, cores)
+
+    def interleave(self, privates, strategy, seed):
+        return interleave_traces(privates, strategy, seed=seed)
+
+    def profile(self, trace, line_size):
+        return profile_from_distances(
+            reuse_distances(trace.addresses, line_size)
+        )
+
+
+# --- cache models ------------------------------------------------------------
+
+
+class CacheModel(Protocol):
+    """Stage 3: per-level cumulative hit rates for one target."""
+
+    name: str
+
+    def hit_rates(self, target, artifacts: ProfileArtifacts) -> dict[str, float]: ...
+
+
+@dataclass
+class AnalyticalSDCM:
+    """Brehob–Enbody SDCM (paper Eq. 1–3) over the PRD/CRD profiles.
+
+    ``backend="numpy"`` evaluates each level with the float64 oracle
+    (bit-identical to the legacy predictor); ``backend="batched"``
+    routes grids through the padded, vmapped JAX kernel in
+    :mod:`repro.api.batched` — one jitted call for the whole
+    (target x level x cores) grid.
+    """
+
+    backend: str = "numpy"
+    name: str = field(default="sdcm", init=False)
+
+    def __post_init__(self):
+        if self.backend not in ("numpy", "batched"):
+            raise ValueError(f"unknown SDCM backend: {self.backend}")
+
+    def hit_rates(self, target, artifacts: ProfileArtifacts) -> dict[str, float]:
+        (out,) = self.hit_rates_grid([(target, artifacts)])
+        return out
+
+    def hit_rates_grid(
+        self, items: list[tuple[object, ProfileArtifacts]]
+    ) -> list[dict[str, float]]:
+        """Evaluate many (target, artifacts) cells; the batched backend
+        folds every level of every cell into one jitted SDCM call."""
+        if self.backend == "batched":
+            from repro.api.batched import batched_hit_rates
+
+            return batched_hit_rates(items)
+        out = []
+        for target, art in items:
+            shared_idx = shared_level_index(target)
+            rates = {}
+            for i, lvl in enumerate(target.levels):
+                prof = art.crd if i >= shared_idx else art.prd
+                rates[lvl.name] = sdcm.hit_rate(
+                    prof, lvl.effective_assoc, lvl.num_lines
+                )
+            out.append(rates)
+        return out
+
+
+@dataclass
+class ExactLRU:
+    """Ground-truth stage-3 model: exact set-associative LRU simulation
+    of the same mimicked traces (the container's PAPI stand-in).  Same
+    interface as the analytical model, so benchmarks swap it in."""
+
+    name: str = field(default="exact-lru", init=False)
+
+    def hit_rates(self, target, artifacts: ProfileArtifacts) -> dict[str, float]:
+        shared_idx = shared_level_index(target)
+        levels = list(target.levels)
+        if artifacts.cores == 1:
+            res = simulate_hierarchy(artifacts.privates[0].addresses, levels)
+            return {r.name: r.cumulative_hit_rate for r in res}
+        out: dict[str, float] = {}
+        res_priv = simulate_hierarchy(
+            artifacts.privates[0].addresses, levels[:shared_idx]
+        )
+        for r in res_priv:
+            out[r.name] = r.cumulative_hit_rate
+        res_shared = simulate_hierarchy(artifacts.shared.addresses, levels)
+        for r, lvl in zip(res_shared, levels):
+            out.setdefault(lvl.name, r.cumulative_hit_rate)
+        return out
+
+
+# --- runtime models ----------------------------------------------------------
+
+
+class RuntimeModel(Protocol):
+    """Stage 4: hit rates + op counts -> seconds."""
+
+    def runtime(
+        self,
+        target,
+        hit_rates: dict[str, float],
+        counts: OpCounts,
+        cores: int,
+        *,
+        mode: str = "throughput",
+        gap_bytes: float = 0.0,
+    ) -> dict[str, float]: ...
+
+
+class EqRuntimeModel:
+    """Paper Eq. 4–7 (T_mem latency/throughput chain + two-mode T_CPU)."""
+
+    def runtime(self, target, hit_rates, counts, cores, *,
+                mode="throughput", gap_bytes=0.0):
+        ordered = [hit_rates[l.name] for l in target.levels]
+        return predict_runtime_s(
+            target, ordered, counts, cores, mode=mode, gap_bytes=gap_bytes
+        )
+
+
+class RooflineRuntimeModel:
+    """Accelerator stage 4: VMEM hits are ~free, misses stream from HBM
+    at ``hbm_bandwidth``; compute at ``peak_flops_bf16``.  ``mode``
+    picks the combiner: throughput-bound overlap (max) vs a serialized
+    latency chain (sum)."""
+
+    def runtime(self, target, hit_rates, counts, cores, *,
+                mode="throughput", gap_bytes=0.0):
+        share = counts.scaled(1.0 / max(cores, 1))
+        vmem_rate = next(iter(hit_rates.values())) if hit_rates else 0.0
+        miss_bytes = (1.0 - vmem_rate) * share.total_bytes
+        t_mem = miss_bytes / target.hbm_bandwidth + target.vmem_latency_s
+        t_cpu = share.fp_ops / target.peak_flops_bf16
+        t_pred = max(t_mem, t_cpu) if mode == "throughput" else t_mem + t_cpu
+        return {"t_pred_s": t_pred, "t_mem_s": t_mem, "t_cpu_s": t_cpu}
+
+
+def default_runtime_model(target) -> RuntimeModel:
+    """CPU targets carry Eq. 4–7 instruction timings; targets exposing
+    bandwidth/FLOP peaks instead get the roofline combiner."""
+    if hasattr(target, "instr"):
+        return EqRuntimeModel()
+    return RooflineRuntimeModel()

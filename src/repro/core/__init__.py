@@ -3,17 +3,31 @@
 The paper's pipeline (Fig. 1):  labeled trace -> mimicked private
 traces (Alg. 1) -> interleaved shared trace (Alg. 2) -> PRD/CRD reuse
 profiles -> SDCM hit rates (Eq. 1-3) -> analytical runtime (Eq. 4-7).
-"""
-from repro.core.predictor import PPTMulticorePredictor, Prediction
-from repro.core.runtime_model import OpCounts, predict_runtime_s
-from repro.core.sdcm import hit_rate, phit_given_d, phit_given_d_np
 
-__all__ = [
-    "PPTMulticorePredictor",
-    "Prediction",
-    "OpCounts",
-    "predict_runtime_s",
-    "hit_rate",
-    "phit_given_d",
-    "phit_given_d_np",
-]
+Re-exports resolve lazily (PEP 562): ``repro.hw.targets`` imports the
+leaf ``repro.core.levels``, and an eager predictor import here would
+close an hw <-> core cycle.
+"""
+from __future__ import annotations
+
+_EXPORTS = {
+    "PPTMulticorePredictor": "repro.core.predictor",
+    "Prediction": "repro.core.predictor",
+    "OpCounts": "repro.core.runtime_model",
+    "predict_runtime_s": "repro.core.runtime_model",
+    "hit_rate": "repro.core.sdcm",
+    "phit_given_d": "repro.core.sdcm",
+    "phit_given_d_np": "repro.core.sdcm",
+    "CacheLevelConfig": "repro.core.levels",
+    "LevelResult": "repro.core.levels",
+}
+
+__all__ = list(_EXPORTS)
+
+
+def __getattr__(name: str):
+    if name in _EXPORTS:
+        import importlib
+
+        return getattr(importlib.import_module(_EXPORTS[name]), name)
+    raise AttributeError(f"module 'repro.core' has no attribute {name!r}")

@@ -17,39 +17,17 @@ number of distinct same-set lines touched since its line's last use is
 """
 from __future__ import annotations
 
-from dataclasses import dataclass
-
 import numpy as np
 
+from .levels import CacheLevelConfig, LevelResult
 from .reuse.distance import per_set_reuse_distances
 
-
-@dataclass(frozen=True)
-class CacheLevelConfig:
-    name: str
-    size_bytes: int
-    line_size: int
-    assoc: int  # ways; >= num_lines means fully associative
-
-    @property
-    def num_lines(self) -> int:
-        return max(1, self.size_bytes // self.line_size)
-
-    @property
-    def effective_assoc(self) -> int:
-        return min(self.assoc, self.num_lines)
-
-    @property
-    def num_sets(self) -> int:
-        return max(1, self.num_lines // self.effective_assoc)
-
-
-@dataclass(frozen=True)
-class LevelResult:
-    name: str
-    accesses: int          # references reaching this level
-    hits: int              # hits at this level
-    cumulative_hit_rate: float  # 1 - misses_here / total_trace_accesses
+__all__ = [
+    "CacheLevelConfig",
+    "LevelResult",
+    "simulate_level",
+    "simulate_hierarchy",
+]
 
 
 def simulate_level(addresses: np.ndarray, cfg: CacheLevelConfig) -> np.ndarray:

@@ -1,30 +1,24 @@
-"""End-to-end PPT-Multicore predictor (paper Fig. 1).
+"""Legacy end-to-end predictor — now a thin DEPRECATED shim over
+:class:`repro.api.Session` (see docs/api_migration.md).
 
-One sequential labeled trace in; per-level cache hit rates and the
-predicted runtime of the parallel section out — for ANY core count,
-without re-tracing (the paper's headline property: "predictions for
-various core counts without having to rerun the application").
+The class predates the unified pipeline: it recomputes reuse profiles
+on every ``predict`` call and only speaks CPU targets.  It is kept so
+existing scripts keep working bit-for-bit — internally every method
+routes through the same stage implementations the new API uses, with
+artifact caching disabled to preserve the legacy per-call cost model.
+
+New code should build a :class:`repro.api.PredictionRequest` and run it
+through a cached ``Session`` instead.
 """
 from __future__ import annotations
 
-from dataclasses import dataclass, field
+import warnings
+from dataclasses import dataclass
 
-import numpy as np
-
-from repro.core import sdcm
-from repro.core.cachesim import simulate_hierarchy
-from repro.core.reuse.crd import multicore_profiles
-from repro.core.reuse.distance import reuse_distances
-from repro.core.reuse.profile import ReuseProfile, profile_from_distances
-from repro.core.runtime_model import OpCounts, predict_runtime_s
-from repro.core.trace.interleave import interleave_traces
-from repro.core.trace.mimic import gen_private_traces
+from repro.core.reuse.profile import ReuseProfile
+from repro.core.runtime_model import OpCounts
 from repro.core.trace.types import LabeledTrace
-
-if True:  # lazy: repro.hw imports repro.core (cachesim) — avoid the cycle
-    from typing import TYPE_CHECKING
-    if TYPE_CHECKING:
-        from repro.hw.targets import CPUTarget
+from repro.hw.targets import CPUTarget
 
 
 @dataclass
@@ -41,32 +35,33 @@ class Prediction:
 
 
 class PPTMulticorePredictor:
-    """Trace -> profiles -> SDCM hit rates -> Eq.4-7 runtime.
+    """Deprecated: use ``repro.api.Session`` + ``PredictionRequest``.
 
-    Private levels (below ``target.shared_level``) are predicted from
-    the PRD of the mimicked private traces; the shared LLC from the CRD
-    of the interleaved trace.  Per the paper's Table-6 metric, every
-    level's SDCM is evaluated against the *full* profile at that level's
-    geometry (cumulative hit rates).
+    Trace -> profiles -> SDCM hit rates -> Eq.4-7 runtime, exactly as
+    before; each call recomputes its artifacts (the legacy behaviour —
+    the new Session amortizes them across a whole grid).
     """
 
     def __init__(self, target: CPUTarget):
+        warnings.warn(
+            "PPTMulticorePredictor is deprecated; use repro.api.Session "
+            "with a PredictionRequest (docs/api_migration.md)",
+            DeprecationWarning,
+            stacklevel=2,
+        )
+        from repro.api.session import Session
+
         self.target = target
+        self._session = Session(cache=False)
 
     def _level_profiles(
         self, trace: LabeledTrace, num_cores: int, strategy: str, seed: int
     ) -> tuple[ReuseProfile, ReuseProfile]:
-        line = self.target.levels[0].line_size
-        if num_cores == 1:
-            prof = profile_from_distances(reuse_distances(trace.addresses, line))
-            return prof, prof
-        privates = gen_private_traces(trace, num_cores)
-        # PRD of the master core (cores are symmetric by construction;
-        # averaging over cores is available via multicore_profiles).
-        prd = profile_from_distances(reuse_distances(privates[0].addresses, line))
-        shared = interleave_traces(privates, strategy, seed=seed)
-        crd = profile_from_distances(reuse_distances(shared.addresses, line))
-        return prd, crd
+        art = self._session.artifacts(
+            trace, num_cores, strategy=strategy, seed=seed,
+            line_size=self.target.levels[0].line_size,
+        )
+        return art.prd, art.crd
 
     def hit_rates(
         self,
@@ -76,13 +71,12 @@ class PPTMulticorePredictor:
         strategy: str = "round_robin",
         seed: int = 0,
     ) -> tuple[dict[str, float], ReuseProfile, ReuseProfile]:
-        prd, crd = self._level_profiles(trace, num_cores, strategy, seed)
-        shared_idx = self.target.shared_level % len(self.target.levels)
-        rates: dict[str, float] = {}
-        for i, lvl in enumerate(self.target.levels):
-            prof = crd if i >= shared_idx else prd
-            rates[lvl.name] = sdcm.hit_rate(prof, lvl.effective_assoc, lvl.num_lines)
-        return rates, prd, crd
+        art = self._session.artifacts(
+            trace, num_cores, strategy=strategy, seed=seed,
+            line_size=self.target.levels[0].line_size,
+        )
+        rates = self._session.cache_model.hit_rates(self.target, art)
+        return rates, art.prd, art.crd
 
     def predict(
         self,
@@ -96,27 +90,30 @@ class PPTMulticorePredictor:
         seed: int = 0,
         keep_profiles: bool = False,
     ) -> Prediction:
-        rates, prd, crd = self.hit_rates(
-            trace, num_cores, strategy=strategy, seed=seed
-        )
-        timing = predict_runtime_s(
-            self.target,
-            [rates[l.name] for l in self.target.levels],
-            counts,
-            num_cores,
-            mode=mode,
+        from repro.api.request import PredictionRequest
+
+        req = PredictionRequest(
+            targets=(self.target,),
+            core_counts=(num_cores,),
+            strategies=(strategy,),
+            modes=(mode,),
+            counts=counts,
+            seed=seed,
             gap_bytes=gap_bytes,
+            keep_profiles=keep_profiles,
+            respect_core_limit=False,
         )
+        cell = self._session.predict(trace, req).predictions[0]
         return Prediction(
-            target=self.target.name,
-            num_cores=num_cores,
-            strategy=strategy,
-            hit_rates=rates,
-            t_pred_s=timing["t_pred_s"],
-            t_mem_s=timing["t_mem_s"],
-            t_cpu_s=timing["t_cpu_s"],
-            private_profile=prd if keep_profiles else None,
-            shared_profile=crd if keep_profiles else None,
+            target=cell.target,
+            num_cores=cell.cores,
+            strategy=cell.strategy,
+            hit_rates=cell.hit_rates,
+            t_pred_s=cell.t_pred_s,
+            t_mem_s=cell.t_mem_s,
+            t_cpu_s=cell.t_cpu_s,
+            private_profile=cell.private_profile,
+            shared_profile=cell.shared_profile,
         )
 
     def sweep_cores(
@@ -140,24 +137,6 @@ class PPTMulticorePredictor:
     ) -> dict[str, float]:
         """Exact LRU simulation of the same mimicked traces — the
         container's PAPI stand-in (DESIGN.md §7)."""
-        shared_idx = self.target.shared_level % len(self.target.levels)
-        if num_cores == 1:
-            res = simulate_hierarchy(trace.addresses, list(self.target.levels))
-            return {r.name: r.cumulative_hit_rate for r in res}
-        privates = gen_private_traces(trace, num_cores)
-        shared = interleave_traces(privates, strategy, seed=seed)
-        out: dict[str, float] = {}
-        # private levels: simulate the master core's private hierarchy
-        res_priv = simulate_hierarchy(
-            privates[0].addresses, list(self.target.levels[:shared_idx])
+        return self._session.ground_truth_hit_rates(
+            trace, self.target, num_cores, strategy=strategy, seed=seed
         )
-        for r in res_priv:
-            out[r.name] = r.cumulative_hit_rate
-        # shared levels: simulate on the interleaved trace
-        res_shared = simulate_hierarchy(
-            shared.addresses, list(self.target.levels)
-        )
-        for r, lvl in zip(res_shared, self.target.levels):
-            if lvl.name not in out:
-                out[lvl.name] = r.cumulative_hit_rate
-        return out

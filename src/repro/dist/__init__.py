@@ -1,0 +1,15 @@
+from repro.dist.sharding import (
+    ShardingRules,
+    param_shardings,
+    pspec_for,
+    shard,
+    use_sharding,
+)
+
+__all__ = [
+    "ShardingRules",
+    "param_shardings",
+    "pspec_for",
+    "shard",
+    "use_sharding",
+]

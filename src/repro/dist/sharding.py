@@ -1,0 +1,188 @@
+"""Logical-axes sharding: one rules table maps model-code axis names
+onto whatever mesh the run happens to have.
+
+Model code annotates arrays with *logical* names (``"embed"``,
+``"act_batch"``, ...) via :func:`shard` and :class:`PSpec` axes; this
+module resolves them to mesh axes through a :class:`ShardingRules`
+table.  Resolution is mesh-aware and total:
+
+* rules may name mesh axes the current mesh doesn't have (a host mesh
+  has no ``"model"`` axis) — those silently replicate;
+* a dimension that a mapped mesh axis doesn't divide falls back to
+  replication (recorded, so ``plan_remesh`` can report it);
+* a mesh axis is never used twice within one ``PartitionSpec``.
+
+Inside ``with use_sharding(rules):`` every :func:`shard` call becomes a
+``with_sharding_constraint``; outside any context it is the identity,
+so the same model code runs unsharded on a laptop and sharded on a pod.
+"""
+from __future__ import annotations
+
+import contextlib
+import dataclasses
+import math
+from typing import Any
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec
+
+# Default logical-axis -> mesh-axis table.  Tuples try the axes in
+# order (DP runs over ("pod", "data") when both exist).  ``None``
+# replicates.  Unknown logical names replicate.
+DEFAULT_RULES: dict[str, Any] = {
+    # activations
+    "act_batch": ("pod", "data"),
+    "act_seq": None,
+    "act_kv_seq": None,
+    "act_embed": None,
+    "act_heads": "model",
+    "act_kv_heads": "model",
+    "act_mlp": "model",
+    "act_vocab": "model",
+    "act_experts": "model",
+    # parameters
+    "embed": None,
+    "mlp": "model",
+    "heads": "model",
+    "kv_heads": "model",
+    "vocab": "model",
+    "experts": "model",
+    # stacked/scanned leading axes are never sharded
+    "layers": None,
+    "groups": None,
+}
+
+
+def _as_tuple(v) -> tuple:
+    if v is None:
+        return ()
+    if isinstance(v, (tuple, list)):
+        return tuple(v)
+    return (v,)
+
+
+@dataclasses.dataclass(frozen=True)
+class ShardingRules:
+    """A mesh plus the logical->physical axis table for one run."""
+
+    mesh: Mesh
+    rules: dict[str, Any] = dataclasses.field(default_factory=dict)
+
+    def __post_init__(self):
+        merged = dict(DEFAULT_RULES)
+        merged.update(self.rules or {})
+        object.__setattr__(self, "rules", merged)
+
+    def with_overrides(self, **overrides) -> "ShardingRules":
+        merged = dict(self.rules)
+        merged.update(overrides)
+        return ShardingRules(self.mesh, merged)
+
+    def mesh_axes_for(self, logical: str | None) -> tuple[str, ...]:
+        """Mesh axes (present in this mesh) a logical axis maps onto."""
+        if logical is None:
+            return ()
+        mapped = _as_tuple(self.rules.get(logical))
+        return tuple(a for a in mapped if a in self.mesh.shape)
+
+    def axis_size(self, axes) -> int:
+        """Product of mesh-axis sizes (missing axes count as 1)."""
+        return math.prod(
+            self.mesh.shape.get(a, 1) for a in _as_tuple(axes)
+        ) or 1
+
+    @property
+    def dp_axes(self) -> tuple[str, ...]:
+        """Mesh axes the batch dimension shards over."""
+        return self.mesh_axes_for("act_batch")
+
+
+def pspec_for(
+    shape,
+    logical_axes,
+    rules: ShardingRules,
+    fallbacks: list | None = None,
+) -> PartitionSpec:
+    """PartitionSpec for an array of ``shape`` whose dims carry
+    ``logical_axes`` names (None entries replicate).
+
+    Mesh axes that don't divide the dimension, or that an earlier
+    dimension already consumed, fall back to replication; each such
+    event is appended to ``fallbacks`` as ``(logical_axis, dim)``.
+    """
+    axes = _as_tuple(logical_axes)
+    if len(axes) < len(shape):
+        axes = axes + (None,) * (len(shape) - len(axes))
+    used: set[str] = set()
+    entries: list = []
+    for dim, logical in zip(range(len(shape)), axes):
+        mapped = rules.mesh_axes_for(logical)
+        avail = tuple(a for a in mapped if a not in used)
+        extent = math.prod(rules.mesh.shape[a] for a in avail) if avail else 1
+        if not avail:
+            if mapped and fallbacks is not None:
+                fallbacks.append((logical, dim))
+            entries.append(None)
+            continue
+        if shape[dim] % extent != 0:
+            if fallbacks is not None:
+                fallbacks.append((logical, dim))
+            entries.append(None)
+            continue
+        used.update(avail)
+        entries.append(avail[0] if len(avail) == 1 else avail)
+    while entries and entries[-1] is None:
+        entries.pop()
+    return PartitionSpec(*entries)
+
+
+def _is_axes_leaf(x) -> bool:
+    return x is None or (
+        isinstance(x, tuple)
+        and all(isinstance(a, str) or a is None for a in x)
+    )
+
+
+def param_shardings(abstract_tree, axes_tree, rules: ShardingRules):
+    """(NamedSharding tree, fallback list) for a pytree of abstract
+    arrays and a parallel tree of logical-axes tuples."""
+    leaves, treedef = jax.tree_util.tree_flatten(abstract_tree)
+    axes_leaves = treedef.flatten_up_to(axes_tree)
+    fallbacks: list = []
+    shardings = []
+    for leaf, axes in zip(leaves, axes_leaves):
+        spec = pspec_for(tuple(leaf.shape), axes, rules, fallbacks)
+        shardings.append(NamedSharding(rules.mesh, spec))
+    return jax.tree_util.tree_unflatten(treedef, shardings), fallbacks
+
+
+# --- the shard() constraint ---------------------------------------------------
+
+_ACTIVE: list[ShardingRules] = []
+
+
+@contextlib.contextmanager
+def use_sharding(rules: ShardingRules):
+    """Activate ``rules`` for :func:`shard` calls in this block (the
+    block typically being a function body under jit tracing)."""
+    _ACTIVE.append(rules)
+    try:
+        yield rules
+    finally:
+        _ACTIVE.pop()
+
+
+def current_rules() -> ShardingRules | None:
+    return _ACTIVE[-1] if _ACTIVE else None
+
+
+def shard(x, *logical_axes):
+    """Constrain ``x``'s sharding by logical axis names.  Identity when
+    no rules are active (unsharded/debug runs)."""
+    rules = current_rules()
+    if rules is None:
+        return x
+    spec = pspec_for(tuple(x.shape), logical_axes, rules)
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(rules.mesh, spec)
+    )

@@ -1,4 +1,5 @@
 from repro.hw.targets import (
+    ALL_TARGETS,
     BROADWELL_E5_2699V4,
     CPU_TARGETS,
     HASWELL_I7_5960X,
@@ -6,9 +7,11 @@ from repro.hw.targets import (
     CPUTarget,
     TPUTarget,
     ZEN2_EPYC_7702P,
+    resolve_target,
 )
 
 __all__ = [
+    "ALL_TARGETS",
     "BROADWELL_E5_2699V4",
     "CPU_TARGETS",
     "HASWELL_I7_5960X",
@@ -16,4 +19,5 @@ __all__ = [
     "CPUTarget",
     "TPUTarget",
     "ZEN2_EPYC_7702P",
+    "resolve_target",
 ]

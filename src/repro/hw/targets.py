@@ -12,7 +12,7 @@ from __future__ import annotations
 
 from dataclasses import dataclass, field
 
-from repro.core.cachesim import CacheLevelConfig
+from repro.core.levels import CacheLevelConfig
 
 
 @dataclass(frozen=True)
@@ -115,6 +115,12 @@ CPU_TARGETS = {
 
 @dataclass(frozen=True)
 class TPUTarget:
+    """TPU chip modeled through the SAME cache-hierarchy interface as
+    the CPUs: ``levels``/``shared_level``/``cores`` make it a drop-in
+    target for the ``repro.api`` pipeline (VMEM = one fully-associative
+    shared level), so there is no separate TPU prediction code path.
+    """
+
     name: str = "tpu-v5e"
     peak_flops_bf16: float = 197e12      # per chip
     hbm_bandwidth: float = 819e9         # bytes/s per chip
@@ -128,6 +134,7 @@ class TPUTarget:
     hbm_latency_s: float = 500e-9
     ici_latency_s: float = 1e-6
     host_bandwidth: float = 25e9
+    shared_level: int = 0                # VMEM is shared by all compute units
 
     def vmem_cache_config(self) -> CacheLevelConfig:
         # VMEM modeled as a fully-associative "cache" over 512B granules:
@@ -136,5 +143,32 @@ class TPUTarget:
         n = self.vmem_bytes // self.vmem_line
         return CacheLevelConfig("VMEM", self.vmem_bytes, self.vmem_line, n)
 
+    @property
+    def levels(self) -> tuple[CacheLevelConfig, ...]:
+        return (self.vmem_cache_config(),)
+
+    @property
+    def cores(self) -> int:
+        # "core count" in a grid request maps to chips for this target
+        return self.chips_per_pod
+
 
 TPU_V5E = TPUTarget()
+
+# Unified registry: every target the prediction API can address by name.
+ALL_TARGETS: dict[str, CPUTarget | TPUTarget] = {
+    **CPU_TARGETS,
+    TPU_V5E.name: TPU_V5E,
+}
+
+
+def resolve_target(target):
+    """Accept a target object or its registry name."""
+    if isinstance(target, str):
+        try:
+            return ALL_TARGETS[target]
+        except KeyError:
+            raise KeyError(
+                f"unknown target {target!r}; known: {sorted(ALL_TARGETS)}"
+            ) from None
+    return target

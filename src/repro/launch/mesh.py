@@ -6,21 +6,26 @@ from __future__ import annotations
 import jax
 
 
+def make_mesh_compat(shape, axes):
+    """jax.make_mesh across versions: ``axis_types`` appeared after
+    0.4.x (and defaults to Auto there), so only pass it when it exists."""
+    if hasattr(jax.sharding, "AxisType"):
+        return jax.make_mesh(
+            shape, axes,
+            axis_types=(jax.sharding.AxisType.Auto,) * len(axes),
+        )
+    return jax.make_mesh(shape, axes)
+
+
 def make_production_mesh(*, multi_pod: bool = False):
     """16x16 = 256 chips/pod ("data","model"); 2 pods = 512 chips with a
     leading "pod" axis.  DP runs over ("pod","data"); TP over "model"."""
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(
-        shape, axes,
-        axis_types=(jax.sharding.AxisType.Auto,) * len(axes),
-    )
+    return make_mesh_compat(shape, axes)
 
 
 def make_host_mesh():
     """Whatever this host exposes, as a 1D ("data",) mesh — used by the
     runnable examples and smoke tests."""
-    n = jax.device_count()
-    return jax.make_mesh(
-        (n,), ("data",), axis_types=(jax.sharding.AxisType.Auto,)
-    )
+    return make_mesh_compat((jax.device_count(),), ("data",))

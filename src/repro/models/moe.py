@@ -52,12 +52,17 @@ def _capacity(group_tokens: int, cfg: MoEConfig) -> int:
     return max(4, -(-c // 4) * 4)  # round up to a multiple of 4, floor 4
 
 
-def moe_apply(params, x: jnp.ndarray, cfg: MoEConfig):
+def moe_apply(params, x: jnp.ndarray, cfg: MoEConfig, *, drop: bool = True):
     """x: [B, S, D] -> (y, aux_loss).
 
     Top-k routing with per-expert, per-group capacity; overflowing
     tokens are dropped (Switch/GShard semantics).  Aux load-balance loss
     follows Switch Transformer eq. 4.
+
+    ``drop=False`` sizes the buffers so no token can overflow (a
+    token's top-k experts are distinct, so <= g_tok tokens land on any
+    expert) — inference paths use it to make prefill and stepwise
+    decode route identically regardless of group/capacity arithmetic.
     """
     b, s, d = x.shape
     t = b * s
@@ -66,7 +71,7 @@ def moe_apply(params, x: jnp.ndarray, cfg: MoEConfig):
     while t % g_tok:
         g_tok -= 1  # largest divisor <= tokens_per_group
     n_groups = t // g_tok
-    cap = _capacity(g_tok, cfg)
+    cap = _capacity(g_tok, cfg) if drop else -(-g_tok // 4) * 4
 
     xt = shard(x.reshape(n_groups, g_tok, d), "act_batch", None, None)
     logits = jnp.einsum("gtd,de->gte", xt, params["router"],

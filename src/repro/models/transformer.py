@@ -111,7 +111,9 @@ def block_apply(cfg: TransformerConfig, params, x, *, positions,
         hm = L.mlp(params["mlp"], h)
         y = y + shard(hm, "act_batch", res_seq, "act_embed")
     if "moe" in params:
-        ym, aux = moe_apply(params["moe"], h, cfg.moe)
+        # training keeps capacity-drop semantics; inference (cache
+        # present) routes exactly so prefill == stepwise decode
+        ym, aux = moe_apply(params["moe"], h, cfg.moe, drop=cache is None)
         y = y + ym
     return shard(x + y, "act_batch", res_seq, "act_embed"), new_cache, aux
 

@@ -32,6 +32,8 @@ def test_scan_trip_count_multiplies_flops():
     # the whole reason this module exists
     xla = jax.jit(f).lower(
         jnp.ones((n, n), jnp.float32)).compile().cost_analysis()
+    if isinstance(xla, (list, tuple)):  # jax<=0.4.x returns [dict]
+        xla = xla[0]
     assert xla["flops"] < cost["flops"] / (trips - 2)
 
 
@@ -104,7 +106,7 @@ def test_parser_handles_tuple_types_with_comments():
 
 
 def test_collective_stats_sharded_matmul():
-    import subprocess, sys
+    import os, subprocess, sys
     from pathlib import Path
 
     script = r"""
@@ -112,8 +114,8 @@ import os
 os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
 import jax, jax.numpy as jnp
 from jax.sharding import NamedSharding, PartitionSpec as P
-mesh = jax.make_mesh((2, 4), ("data", "model"),
-                     axis_types=(jax.sharding.AxisType.Auto,)*2)
+from repro.launch.mesh import make_mesh_compat
+mesh = make_mesh_compat((2, 4), ("data", "model"))
 f = jax.jit(lambda x, w: (x @ w).sum(),
             in_shardings=(NamedSharding(mesh, P("data", "model")),
                           NamedSharding(mesh, P("model", None))))
@@ -133,7 +135,10 @@ print("COLL-OK")
         [sys.executable, "-c", script], capture_output=True, text=True,
         timeout=300, cwd=repo,
         env={"PYTHONPATH": str(repo / "src"), "PATH": "/usr/bin:/bin",
-             "HOME": "/root"},
+             "HOME": "/root",
+             # without this jax probes accelerator plugins for minutes
+             **({"JAX_PLATFORMS": os.environ["JAX_PLATFORMS"]}
+                if "JAX_PLATFORMS" in os.environ else {})},
     )
     assert proc.returncode == 0, proc.stderr[-2000:]
     assert "COLL-OK" in proc.stdout

@@ -1,0 +1,211 @@
+"""Session cache semantics + legacy equivalence (ISSUE-1 acceptance)."""
+from __future__ import annotations
+
+import warnings
+
+import numpy as np
+import pytest
+
+from repro.api import (
+    ExactLRU,
+    MimicProfileBuilder,
+    PredictionRequest,
+    Session,
+)
+from repro.core.runtime_model import OpCounts
+from repro.core.trace.types import trace_from_blocks
+from repro.hw.targets import CPU_TARGETS, TPU_V5E, resolve_target
+
+CPU_NAMES = tuple(CPU_TARGETS)
+CORES = (1, 2, 4, 8)
+COUNTS = OpCounts(int_ops=3000, fp_ops=1500, div_ops=10, loads=3000,
+                  stores=1500, total_bytes=4500 * 8)
+
+
+def small_trace(iters=600, stride=8):
+    blocks = [("OUT__1__.entry", np.array([0, 8]), True)]
+    A0, B0 = 1 << 20, 2 << 20
+    for i in range(iters):
+        blocks.append((
+            "OUT__1__.for.body",
+            np.array([A0 + stride * i, B0 + stride * (i % 64), 0]),
+            np.array([False, False, True]),
+        ))
+    return trace_from_blocks(blocks)
+
+
+class CountingBuilder(MimicProfileBuilder):
+    """Instrumented stage-2 builder: every profile construction counted."""
+
+    def __init__(self):
+        self.profile_calls = 0
+        self.mimic_calls = 0
+        self.interleave_calls = 0
+
+    def private_traces(self, trace, cores):
+        self.mimic_calls += 1
+        return super().private_traces(trace, cores)
+
+    def interleave(self, privates, strategy, seed):
+        self.interleave_calls += 1
+        return super().interleave(privates, strategy, seed)
+
+    def profile(self, trace, line_size):
+        self.profile_calls += 1
+        return super().profile(trace, line_size)
+
+
+def test_profiles_computed_once_across_three_target_sweep():
+    """The acceptance criterion: a 3-target x 4-core grid computes each
+    (cores, strategy) profile exactly once — asserted via counters, not
+    trusted."""
+    trace = small_trace()
+    builder = CountingBuilder()
+    session = Session(profile_builder=builder)
+    request = PredictionRequest(
+        targets=CPU_NAMES, core_counts=CORES, counts=COUNTS,
+        respect_core_limit=False,
+    )
+    result = session.predict(trace, request)
+    assert len(result) == len(CPU_NAMES) * len(CORES)
+    # one artifact build per (cores, strategy) cell; 64B lines shared by
+    # all three CPUs
+    assert session.stats.profile_builds == len(CORES)
+    assert session.stats.profile_hits == (len(CPU_NAMES) - 1) * len(CORES)
+    # stage-level: cores>1 cells build PRD+CRD (2 calls) once each;
+    # cores==1 goes through the cached reuse-distance path
+    assert builder.profile_calls == 2 * (len(CORES) - 1)
+    assert builder.mimic_calls == len(CORES) - 1
+    assert builder.interleave_calls == len(CORES) - 1
+    # a repeated identical request is served fully from cache
+    before = session.stats.profile_builds
+    session.predict(trace, request)
+    assert session.stats.profile_builds == before
+
+
+def test_prediction_set_matches_legacy_sweep_cores():
+    """Legacy shim output must match Session output at f64 tolerance."""
+    trace = small_trace()
+    session = Session()
+    request = PredictionRequest(
+        targets=CPU_NAMES, core_counts=CORES, counts=COUNTS,
+        respect_core_limit=False,
+    )
+    result = session.predict(trace, request)
+    for name in CPU_NAMES:
+        with warnings.catch_warnings():
+            warnings.simplefilter("ignore", DeprecationWarning)
+            from repro.core.predictor import PPTMulticorePredictor
+
+            legacy = PPTMulticorePredictor(resolve_target(name))
+            preds = legacy.sweep_cores(trace, list(CORES), COUNTS)
+        for p in preds:
+            cell = result.one(target=name, cores=p.num_cores)
+            for lvl, rate in p.hit_rates.items():
+                assert cell.hit_rates[lvl] == pytest.approx(rate, abs=1e-6)
+            assert cell.t_pred_s == pytest.approx(p.t_pred_s, rel=1e-6)
+            assert cell.t_mem_s == pytest.approx(p.t_mem_s, rel=1e-6)
+            assert cell.t_cpu_s == pytest.approx(p.t_cpu_s, rel=1e-6)
+
+
+def test_legacy_shim_emits_deprecation_warning():
+    from repro.core.predictor import PPTMulticorePredictor
+
+    with pytest.warns(DeprecationWarning, match="Session"):
+        PPTMulticorePredictor(resolve_target(CPU_NAMES[0]))
+
+
+def test_ground_truth_through_same_stage_interface():
+    """ExactLRU over Session artifacts == the legacy ground-truth path."""
+    trace = small_trace()
+    session = Session()
+    target = resolve_target(CPU_NAMES[0])
+    gt = session.ground_truth_hit_rates(trace, target, 4)
+    with warnings.catch_warnings():
+        warnings.simplefilter("ignore", DeprecationWarning)
+        from repro.core.predictor import PPTMulticorePredictor
+
+        legacy = PPTMulticorePredictor(target).ground_truth_hit_rates(trace, 4)
+    assert gt == pytest.approx(legacy)
+    # SDCM prediction should land near the exact simulation
+    pred = session.hit_rates(trace, target, 4)
+    for lvl in pred:
+        assert abs(pred[lvl] - gt[lvl]) < 0.05
+
+
+def test_tpu_vmem_through_same_cache_model():
+    """The TPU target runs through the identical SDCM path (no fork):
+    VMEM is one fully-associative level, so SDCM degenerates to the
+    exact stack rule and matches the LRU simulator to float precision."""
+    trace = small_trace()
+    session = Session()
+    request = PredictionRequest(
+        targets=("tpu-v5e",), core_counts=(1, 4), counts=COUNTS,
+    )
+    result = session.predict(trace, request)
+    assert len(result) == 2
+    for cell in result:
+        assert set(cell.hit_rates) == {"VMEM"}
+        assert 0.0 <= cell.hit_rates["VMEM"] <= 1.0
+        assert cell.t_pred_s > 0
+    exact = session.ground_truth_hit_rates(trace, TPU_V5E, 4)
+    pred = result.one(cores=4).hit_rates
+    assert pred["VMEM"] == pytest.approx(exact["VMEM"], abs=1e-9)
+
+
+def test_exact_lru_as_session_cache_model():
+    """Ground truth is itself a pluggable stage-3 model."""
+    trace = small_trace()
+    sess_pred = Session()
+    sess_exact = Session(cache_model=ExactLRU())
+    request = PredictionRequest(targets=(CPU_NAMES[0],), core_counts=(4,))
+    exact_cell = sess_exact.predict(trace, request).one()
+    gt = sess_pred.ground_truth_hit_rates(
+        trace, resolve_target(CPU_NAMES[0]), 4
+    )
+    assert exact_cell.hit_rates == pytest.approx(gt)
+
+
+def test_request_validation_and_grid_enumeration():
+    with pytest.raises(ValueError, match="at least one target"):
+        PredictionRequest(targets=())
+    with pytest.raises(ValueError, match=">= 1"):
+        PredictionRequest(targets=CPU_NAMES, core_counts=(0,))
+    with pytest.raises(KeyError, match="unknown target"):
+        PredictionRequest(targets=("not-a-cpu",)).resolved_targets()
+    # i7 has 8 cores: a 16-core cell is dropped unless the limit is off
+    req = PredictionRequest(targets=("i7-5960X",), core_counts=(8, 16))
+    assert [c.cores for c in req.cells()] == [8]
+    req = PredictionRequest(targets=("i7-5960X",), core_counts=(8, 16),
+                            respect_core_limit=False)
+    assert [c.cores for c in req.cells()] == [8, 16]
+
+
+def test_prediction_set_table_json_select():
+    trace = small_trace(iters=200)
+    session = Session()
+    request = PredictionRequest(
+        targets=CPU_NAMES[:2], core_counts=(1, 2), counts=COUNTS,
+        respect_core_limit=False,
+    )
+    result = session.predict(trace, request)
+    table = result.to_table()
+    assert "T_pred" in table and CPU_NAMES[0] in table
+    import json
+
+    payload = json.loads(result.to_json())
+    assert len(payload["predictions"]) == 4
+    assert payload["trace_id"] == result.trace_id
+    sub = result.select(cores=2)
+    assert len(sub) == 2 and all(p.cores == 2 for p in sub)
+    with pytest.raises(LookupError):
+        result.one(cores=2)  # two targets match
+
+
+def test_cache_disabled_recomputes():
+    trace = small_trace(iters=200)
+    session = Session(cache=False)
+    session.artifacts(trace, 2)
+    session.artifacts(trace, 2)
+    assert session.stats.profile_builds == 2
+    assert session.stats.profile_hits == 0

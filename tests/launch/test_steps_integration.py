@@ -6,6 +6,7 @@ exercised at 2x4 with reduced configs so it runs in CI time.
 """
 from __future__ import annotations
 
+import os
 import subprocess
 import sys
 from pathlib import Path
@@ -22,8 +23,8 @@ from repro.configs.reduced import reduced_arch
 from repro.launch.steps import build_cell, lower_cell
 from repro.analysis.hlo_cost import loop_aware_cost
 
-mesh = jax.make_mesh((2, 4), ("data", "model"),
-                     axis_types=(jax.sharding.AxisType.Auto,) * 2)
+from repro.launch.mesh import make_mesh_compat
+mesh = make_mesh_compat((2, 4), ("data", "model"))
 spec = reduced_arch("{arch}")
 shape = Shape("t", {seq}, 8, "{kind}")
 cell = build_cell(spec, shape, mesh)
@@ -53,7 +54,10 @@ def test_cell_lowers_and_compiles_on_2x4(arch, seq, kind):
         [sys.executable, "-c", script], capture_output=True, text=True,
         timeout=600, cwd=repo,
         env={"PYTHONPATH": str(repo / "src"), "PATH": "/usr/bin:/bin",
-             "HOME": "/root"},
+             "HOME": "/root",
+             # without this jax probes accelerator plugins for minutes
+             **({"JAX_PLATFORMS": os.environ["JAX_PLATFORMS"]}
+                if "JAX_PLATFORMS" in os.environ else {})},
     )
     assert proc.returncode == 0, proc.stderr[-3000:]
     assert "CELL-OK" in proc.stdout
