@@ -13,12 +13,17 @@
 
 One trace in; the whole (target x cores x strategy x mode) grid out,
 with every reuse profile computed exactly once (``session.stats``).
-The legacy ``repro.core.predictor.PPTMulticorePredictor`` is a
-deprecated shim over this package (docs/api_migration.md).
+``Session(window_size=...)`` routes the reuse-distance passes through
+the streaming layer — bit-identical profiles with peak scan memory
+bounded by O(window + working set) instead of O(trace)
+(docs/streaming.md).  The legacy
+``repro.core.predictor.PPTMulticorePredictor`` is a deprecated shim
+over this package (docs/api_migration.md).
 """
 from repro.api.request import GridCell, PredictionRequest
 from repro.api.results import CellPrediction, PredictionSet
 from repro.api.session import Session, SessionStats
+from repro.core.trace.types import ChunkedTraceSource
 from repro.api.stages import (
     AnalyticalSDCM,
     ArrayTraceSource,
@@ -39,6 +44,7 @@ __all__ = [
     "AnalyticalSDCM",
     "ArrayTraceSource",
     "CacheModel",
+    "ChunkedTraceSource",
     "CellPrediction",
     "EqRuntimeModel",
     "ExactLRU",

@@ -48,6 +48,10 @@ class PredictionRequest:
     keep_profiles: bool = False
     # drop grid cells asking for more cores than the target has
     respect_core_limit: bool = True
+    # route reuse-distance passes through the streaming layer with this
+    # window (bit-identical profiles, O(window + working set) memory);
+    # None defers to the Session/builder default, 0 forces in-memory
+    window_size: int | None = None
 
     def __post_init__(self):
         object.__setattr__(self, "targets", tuple(self.targets))
@@ -60,6 +64,8 @@ class PredictionRequest:
             raise ValueError("PredictionRequest needs at least one target")
         if any(c < 1 for c in self.core_counts):
             raise ValueError("core counts must be >= 1")
+        if self.window_size is not None and self.window_size < 0:
+            raise ValueError("window_size must be >= 0 (0 = in-memory)")
 
     def resolved_targets(self) -> list:
         return [resolve_target(t) for t in self.targets]

@@ -47,6 +47,7 @@ class SessionStats:
     interleave_builds: int = 0
     profile_builds: int = 0
     profile_hits: int = 0
+    streaming_builds: int = 0
 
     def reset(self) -> None:
         for f in dataclasses.fields(self):
@@ -70,8 +71,12 @@ class Session:
         cache_model=None,
         runtime_model=None,
         cache: bool = True,
+        window_size: int | None = None,
     ):
-        self.builder = profile_builder or MimicProfileBuilder()
+        if profile_builder is None:
+            profile_builder = MimicProfileBuilder(window_size=window_size)
+        self.builder = profile_builder
+        self.window_size = window_size
         self.cache_model = cache_model or AnalyticalSDCM()
         self.runtime_model = runtime_model  # None -> per-target default
         self.cache_enabled = cache
@@ -144,15 +149,36 @@ class Session:
             self._shared[key] = shared
         return shared
 
+    def _resolve_window(self, window_size: int | None) -> int | None:
+        """Explicit override > session default > builder default."""
+        if window_size is not None:
+            return window_size or None  # 0 forces the in-memory path
+        if self.window_size is not None:
+            return self.window_size or None  # normalized: one cache key
+        return getattr(self.builder, "window_size", None)
+
     def artifacts(self, source, cores: int, *, strategy: str = "round_robin",
-                  seed: int = 0, line_size: int = 64) -> ProfileArtifacts:
-        """PRD/CRD profiles (+ underlying traces) for one grid cell."""
+                  seed: int = 0, line_size: int = 64,
+                  window_size: int | None = None) -> ProfileArtifacts:
+        """PRD/CRD profiles (+ underlying traces) for one grid cell.
+
+        ``window_size`` (or the Session/builder default) routes the
+        reuse-distance passes through the streaming layer: bit-identical
+        profiles, peak scan memory bounded by the window + working set,
+        and the interleaved shared trace never materialized (for the
+        deterministic strategies) — ``artifacts.shared`` is ``None``.
+        """
+        ws = self._resolve_window(window_size)
         tid, trace = self.load(source)
-        key = (tid, line_size, cores, strategy, seed)
+        key = (tid, line_size, cores, strategy, seed, ws)
         if self.cache_enabled and key in self._profiles:
             self.stats.profile_hits += 1
             return self._profiles[key]
-        if cores == 1:
+        if ws:
+            art = self._streaming_artifacts(
+                tid, trace, cores, strategy, seed, line_size, ws
+            )
+        elif cores == 1:
             prof = profile_from_distances(
                 self._reuse_distances(tid, trace, line_size)
             )
@@ -177,6 +203,50 @@ class Session:
             self._profiles[key] = art
         return art
 
+    def _streaming_artifacts(self, tid, trace, cores, strategy, seed,
+                             line_size, ws) -> ProfileArtifacts:
+        """Window-bounded cell build (ISSUE-2 tentpole).
+
+        Uses the builder's streaming hooks when present (the default
+        ``MimicProfileBuilder`` provides them); a custom builder without
+        them falls back to its own in-memory stages.
+        """
+        self.stats.streaming_builds += 1
+        builder = self.builder
+        if hasattr(builder, "profile_windows"):
+            def stream_profile(t, line):
+                return builder.profile_windows(t, line, ws)
+        else:  # custom builder without streaming hooks: its own stages
+            def stream_profile(t, line):
+                return builder.profile(t, line)
+        if cores == 1:
+            prof = stream_profile(trace, line_size)
+            return ProfileArtifacts(
+                trace_id=tid, cores=1, strategy=strategy, seed=seed,
+                line_size=line_size, privates=[trace], shared=trace,
+                prd=prof, crd=prof, window_size=ws,
+            )
+        privs = self._private_traces(tid, trace, cores)
+        prd = stream_profile(privs[0], line_size)
+        if (
+            strategy in ("round_robin", "chunked")
+            and hasattr(builder, "shared_profile")
+        ):
+            crd, shared = builder.shared_profile(
+                privs, strategy, seed, line_size, ws
+            )
+        else:
+            # uniform (or a builder without streaming hooks) needs the
+            # materialized interleave: go through the Session cache so
+            # it is built once across line sizes/targets
+            shared = self._shared_trace(tid, privs, cores, strategy, seed)
+            crd = stream_profile(shared, line_size)
+        return ProfileArtifacts(
+            trace_id=tid, cores=cores, strategy=strategy, seed=seed,
+            line_size=line_size, privates=privs, shared=shared,
+            prd=prd, crd=crd, window_size=ws,
+        )
+
     # --- execution --------------------------------------------------------
 
     def predict(self, source, request: PredictionRequest) -> PredictionSet:
@@ -193,6 +263,7 @@ class Session:
                 source, cell.cores, strategy=cell.strategy,
                 seed=request.seed,
                 line_size=cell.target.levels[0].line_size,
+                window_size=request.window_size,
             )
             for cell in cells
         ]
@@ -248,10 +319,15 @@ class Session:
     def ground_truth_hit_rates(self, source, target, cores: int, *,
                                strategy: str = "round_robin", seed: int = 0
                                ) -> dict[str, float]:
-        """Exact-LRU simulation through the same stage interface."""
+        """Exact-LRU simulation through the same stage interface.
+
+        ExactLRU simulates the materialized traces, so this always
+        builds in-memory artifacts (``window_size=0``) — it works on a
+        streaming Session too, cached under the in-memory key.
+        """
         target = resolve_target(target)
         art = self.artifacts(
             source, cores, strategy=strategy, seed=seed,
-            line_size=target.levels[0].line_size,
+            line_size=target.levels[0].line_size, window_size=0,
         )
         return ExactLRU().hit_rates(target, art)

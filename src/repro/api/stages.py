@@ -25,10 +25,17 @@ import numpy as np
 from repro.core import sdcm
 from repro.core.cachesim import simulate_hierarchy
 from repro.core.levels import CacheLevelConfig
-from repro.core.reuse.distance import reuse_distances
-from repro.core.reuse.profile import ReuseProfile, profile_from_distances
+from repro.core.reuse.distance import (
+    reuse_distance_windows,
+    reuse_distances,
+)
+from repro.core.reuse.profile import (
+    ReuseProfile,
+    profile_from_distances,
+    profile_from_distances_incremental,
+)
 from repro.core.runtime_model import OpCounts, predict_runtime_s
-from repro.core.trace.interleave import interleave_traces
+from repro.core.trace.interleave import interleave_traces, interleave_windows
 from repro.core.trace.mimic import gen_private_traces
 from repro.core.trace.types import LabeledTrace
 
@@ -97,7 +104,14 @@ def as_trace_source(obj) -> TraceSource:
 @dataclass
 class ProfileArtifacts:
     """Everything derived from one (trace, cores, strategy, seed, line)
-    cell — cached by Session so it is computed exactly once."""
+    cell — cached by Session so it is computed exactly once.
+
+    ``shared`` is ``None`` when the cell was built through the streaming
+    path (``window_size`` set): the interleaved trace is scanned window
+    by window and never materialized.  Profile consumers (SDCM, batched
+    SDCM) only read ``prd``/``crd``; trace consumers (ExactLRU) require
+    the in-memory path.
+    """
 
     trace_id: str
     cores: int
@@ -105,9 +119,10 @@ class ProfileArtifacts:
     seed: int
     line_size: int
     privates: list[LabeledTrace]
-    shared: LabeledTrace
+    shared: LabeledTrace | None
     prd: ReuseProfile
     crd: ReuseProfile
+    window_size: int | None = None
 
 
 class ProfileBuilder(Protocol):
@@ -126,7 +141,21 @@ class ProfileBuilder(Protocol):
 
 class MimicProfileBuilder:
     """Default builder: Algorithm 1 + Algorithm 2 + the Fenwick-tree
-    reuse-distance pass, exactly the paper's pipeline."""
+    reuse-distance pass, exactly the paper's pipeline.
+
+    ``window_size`` routes profile construction through the streaming
+    layer (chunked Fenwick scan + incremental histogram accumulation):
+    bit-identical profiles, peak memory bounded by the window and the
+    working set instead of the trace length.  ``None`` (the default)
+    keeps the monolithic in-memory pass — the oracle the streaming path
+    is tested against.
+    """
+
+    window_size: int | None = None  # class default: subclasses with
+    # bare __init__ (test instrumentation) still resolve it
+
+    def __init__(self, window_size: int | None = None):
+        self.window_size = window_size
 
     def private_traces(self, trace, cores):
         return gen_private_traces(trace, cores)
@@ -135,9 +164,47 @@ class MimicProfileBuilder:
         return interleave_traces(privates, strategy, seed=seed)
 
     def profile(self, trace, line_size):
+        if self.window_size:
+            return self.profile_windows(trace, line_size)
         return profile_from_distances(
             reuse_distances(trace.addresses, line_size)
         )
+
+    def profile_windows(
+        self, source, line_size, window_size: int | None = None
+    ) -> ReuseProfile:
+        """Streaming profile of any window source (``LabeledTrace``,
+        ``ChunkedTraceSource``, or an iterator of windows).
+        ``window_size`` overrides the builder default for this call."""
+        ws = window_size if window_size is not None else (self.window_size or 0)
+        if ws < 1:
+            raise ValueError("profile_windows needs window_size >= 1")
+        return profile_from_distances_incremental(
+            reuse_distance_windows(source, line_size, window_size=ws)
+        )
+
+    def shared_profile(
+        self, privates, strategy: str, seed: int, line_size: int,
+        window_size: int | None = None,
+    ) -> tuple[ReuseProfile, LabeledTrace | None]:
+        """CRD profile of the interleaved trace.
+
+        Streaming mode merges per-core windows and scans them directly
+        — the shared trace is never concatenated (returned trace is
+        ``None``).  The ``uniform`` strategy needs the global random
+        choice sequence, so it interleaves in memory first and streams
+        only the reuse-distance pass.
+        """
+        ws = window_size if window_size is not None else self.window_size
+        if ws and strategy in ("round_robin", "chunked"):
+            wins = interleave_windows(
+                privates, strategy, window_size=ws, seed=seed
+            )
+            return self.profile_windows(wins, line_size, ws), None
+        shared = self.interleave(privates, strategy, seed)
+        if ws:
+            return self.profile_windows(shared, line_size, ws), shared
+        return self.profile(shared, line_size), shared
 
 
 # --- cache models ------------------------------------------------------------
@@ -199,7 +266,16 @@ class AnalyticalSDCM:
 class ExactLRU:
     """Ground-truth stage-3 model: exact set-associative LRU simulation
     of the same mimicked traces (the container's PAPI stand-in).  Same
-    interface as the analytical model, so benchmarks swap it in."""
+    interface as the analytical model, so benchmarks swap it in.
+
+    Private levels aggregate per-core simulations (every core runs its
+    own hierarchy).  Shared levels follow the paper's Table-6
+    convention — the interleaved trace through one inclusive hierarchy,
+    mirroring the CRD profile the SDCM path consumes — which models the
+    upstream filter as a single cache; a per-core-filtered miss-stream
+    merge is a different (finer) model than the paper validates
+    against.
+    """
 
     name: str = field(default="exact-lru", init=False)
 
@@ -209,12 +285,27 @@ class ExactLRU:
         if artifacts.cores == 1:
             res = simulate_hierarchy(artifacts.privates[0].addresses, levels)
             return {r.name: r.cumulative_hit_rate for r in res}
+        if artifacts.shared is None:
+            raise ValueError(
+                "ExactLRU simulates the materialized traces; streaming "
+                "artifacts (window_size set) keep no shared trace — use "
+                "an in-memory Session for ground truth"
+            )
         out: dict[str, float] = {}
-        res_priv = simulate_hierarchy(
-            artifacts.privates[0].addresses, levels[:shared_idx]
-        )
-        for r in res_priv:
-            out[r.name] = r.cumulative_hit_rate
+        # private levels: every core runs its own hierarchy; the Table-6
+        # cumulative metric aggregates misses over ALL cores' accesses
+        # (core 0 alone is only correct for symmetric traces)
+        priv_levels = levels[:shared_idx]
+        if priv_levels:
+            total = sum(len(p) for p in artifacts.privates)
+            misses = np.zeros(len(priv_levels), dtype=np.int64)
+            for priv in artifacts.privates:
+                for i, r in enumerate(
+                    simulate_hierarchy(priv.addresses, priv_levels)
+                ):
+                    misses[i] += r.accesses - r.hits
+            for i, lvl in enumerate(priv_levels):
+                out[lvl.name] = 1.0 - misses[i] / max(total, 1)
         res_shared = simulate_hierarchy(artifacts.shared.addresses, levels)
         for r, lvl in zip(res_shared, levels):
             out.setdefault(lvl.name, r.cumulative_hit_rate)
@@ -259,9 +350,14 @@ class RooflineRuntimeModel:
     def runtime(self, target, hit_rates, counts, cores, *,
                 mode="throughput", gap_bytes=0.0):
         share = counts.scaled(1.0 / max(cores, 1))
-        vmem_rate = next(iter(hit_rates.values())) if hit_rates else 0.0
+        # the on-chip level is levels[0] by name, never dict order; a
+        # missing key is a model-wiring bug — fail loudly like the Eq.
+        # 4-7 model does, don't degrade to an all-miss estimate
+        vmem_rate = hit_rates[target.levels[0].name]
         miss_bytes = (1.0 - vmem_rate) * share.total_bytes
-        t_mem = miss_bytes / target.hbm_bandwidth + target.vmem_latency_s
+        t_mem = miss_bytes / target.hbm_bandwidth
+        if miss_bytes > 0.0:  # no misses -> no HBM round-trip to hide
+            t_mem += target.vmem_latency_s
         t_cpu = share.fp_ops / target.peak_flops_bf16
         t_pred = max(t_mem, t_cpu) if mode == "throughput" else t_mem + t_cpu
         return {"t_pred_s": t_pred, "t_mem_s": t_mem, "t_cpu_s": t_cpu}

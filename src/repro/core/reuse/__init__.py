@@ -1,25 +1,33 @@
 from repro.core.reuse.distance import (
+    DEFAULT_WINDOW,
     INF_RD,
     per_set_reuse_distances,
+    reuse_distance_windows,
     reuse_distances,
     reuse_distances_ref,
+    reuse_distances_streaming,
 )
 from repro.core.reuse.profile import (
     ReuseProfile,
     log2_binned,
     profile_from_distances,
+    profile_from_distances_incremental,
     profile_from_trace,
 )
 from repro.core.reuse.crd import MulticoreProfiles, crd_profile, multicore_profiles
 
 __all__ = [
+    "DEFAULT_WINDOW",
     "INF_RD",
     "per_set_reuse_distances",
+    "reuse_distance_windows",
     "reuse_distances",
     "reuse_distances_ref",
+    "reuse_distances_streaming",
     "ReuseProfile",
     "log2_binned",
     "profile_from_distances",
+    "profile_from_distances_incremental",
     "profile_from_trace",
     "MulticoreProfiles",
     "crd_profile",

@@ -46,8 +46,20 @@ class ReuseProfile:
         return self.distances[mask], self.probabilities[mask]
 
     def merged_with(self, other: "ReuseProfile") -> "ReuseProfile":
-        dists = np.concatenate([self.distances, other.distances])
-        counts = np.concatenate([self.counts, other.counts])
+        return ReuseProfile.merge([self, other])
+
+    @staticmethod
+    def merge(profiles) -> "ReuseProfile":
+        """Sum any number of histograms — the streaming accumulator's
+        combine step (windows, shards, and sampled replicas all merge
+        through here)."""
+        profiles = list(profiles)
+        if not profiles:
+            return ReuseProfile(
+                np.empty(0, dtype=np.int64), np.empty(0, dtype=np.int64), 0
+            )
+        dists = np.concatenate([p.distances for p in profiles])
+        counts = np.concatenate([p.counts for p in profiles])
         return profile_from_pairs(dists, counts)
 
     def scaled(self, factor: float) -> "ReuseProfile":
@@ -75,6 +87,28 @@ def profile_from_distances(rds) -> ReuseProfile:
 
 def profile_from_trace(addresses, line_size: int = 1) -> ReuseProfile:
     return profile_from_distances(reuse_distances(addresses, line_size))
+
+
+def profile_from_distances_incremental(rd_windows) -> ReuseProfile:
+    """Fold an iterable of reuse-distance windows into one profile.
+
+    The streaming accumulator: each window is histogrammed and merged
+    into the running (distances, counts) pair, so peak memory is
+    O(distinct distances + window) — the O(N) distance array never
+    exists.  Feed it ``reuse_distance_windows(...)``.
+    """
+    acc_d = np.empty(0, dtype=np.int64)
+    acc_c = np.empty(0, dtype=np.int64)
+    for rds in rd_windows:
+        rds = np.asarray(rds, dtype=np.int64)
+        if rds.size == 0:
+            continue
+        u, c = np.unique(rds, return_counts=True)
+        merged = profile_from_pairs(
+            np.concatenate([acc_d, u]), np.concatenate([acc_c, c])
+        )
+        acc_d, acc_c = merged.distances, merged.counts
+    return ReuseProfile(acc_d, acc_c, int(acc_c.sum()))
 
 
 def log2_binned(profile: ReuseProfile, num_bins: int = 64) -> ReuseProfile:

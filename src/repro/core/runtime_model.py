@@ -82,14 +82,19 @@ def noncontiguous_block_size(
     b_new: float, transfer_chunk: float, max_block: float
 ) -> float:
     """§3.4.2 block-size clamping: gaps inflate the block, transfers
-    quantize to the chunk C, and blocks cap at S."""
+    quantize to the chunk C, and blocks cap at S.
+
+    The cap applies AFTER quantization: when C does not divide S, the
+    ceil-to-chunk of a block just under the cap overshoots it (e.g.
+    C=64, S=100, b_new=99 -> 128), and S is the hardware's hard limit.
+    """
     if b_new <= transfer_chunk:
         return transfer_chunk
     if b_new >= max_block:
         return max_block
     import math
 
-    return math.ceil(b_new / transfer_chunk) * transfer_chunk
+    return min(math.ceil(b_new / transfer_chunk) * transfer_chunk, max_block)
 
 
 def t_mem_s(

@@ -1,10 +1,18 @@
-from repro.core.trace.interleave import interleave_traces
+from repro.core.trace.interleave import interleave_traces, interleave_windows
 from repro.core.trace.mimic import gen_private_traces
-from repro.core.trace.types import LabeledTrace, trace_from_blocks
+from repro.core.trace.types import (
+    ChunkedTraceSource,
+    LabeledTrace,
+    rebatch_windows,
+    trace_from_blocks,
+)
 
 __all__ = [
     "interleave_traces",
+    "interleave_windows",
     "gen_private_traces",
+    "ChunkedTraceSource",
     "LabeledTrace",
+    "rebatch_windows",
     "trace_from_blocks",
 ]

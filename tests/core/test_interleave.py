@@ -64,6 +64,34 @@ def test_uniform_preserves_per_core_order():
     assert (np.diff(sub0) > 0).all() and (np.diff(sub1) > 0).all()
 
 
+@settings(max_examples=40, deadline=None)
+@given(
+    st.lists(
+        st.integers(min_value=0, max_value=50), min_size=2, max_size=5
+    ),
+    st.integers(min_value=0, max_value=2**31 - 1),
+)
+def test_uniform_unequal_lengths_fifo_and_permutation(lengths, seed):
+    """ISSUE-2 satellite: with UNEQUAL-length traces the bulk sampler's
+    exhaustion-cut path (`_uniform_choice_sequence`) must still emit an
+    exact permutation that preserves per-core FIFO order."""
+    traces = [
+        mk(np.arange(n, dtype=np.int64) + 1000 * c)
+        for c, n in enumerate(lengths)
+    ]
+    il = interleave_traces(traces, "uniform", seed=seed)
+    allconc = np.concatenate([t.addresses for t in traces])
+    # exact permutation: same multiset, same total length
+    assert len(il) == len(allconc)
+    assert sorted(il.addresses.tolist()) == sorted(allconc.tolist())
+    # per-core FIFO: the subsequence of each core's (disjoint) address
+    # range equals that core's trace, in order
+    for c, t in enumerate(traces):
+        lo, hi = 1000 * c, 1000 * c + 1000
+        sub = il.addresses[(il.addresses >= lo) & (il.addresses < hi)]
+        assert np.array_equal(sub, t.addresses)
+
+
 def test_uniform_seeds_differ():
     t0 = mk(list(range(50)))
     t1 = mk(list(range(1000, 1050)))

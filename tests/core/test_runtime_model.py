@@ -52,6 +52,17 @@ def test_noncontiguous_clamps():
     assert noncontiguous_block_size(10_000, 64, 4096) == 4096    # >= S -> S
 
 
+def test_noncontiguous_quantization_never_overshoots_cap():
+    """Regression: with C not dividing S, ceil-to-chunk of a block just
+    under the cap used to return a block LARGER than the cap
+    (b_new=99, C=64, S=100 -> 128)."""
+    assert noncontiguous_block_size(99, 64, 100) == 100
+    # sweep: the invariant holds everywhere, not just at the example
+    for b_new in range(1, 300):
+        b = noncontiguous_block_size(float(b_new), 64, 100)
+        assert 64 <= b <= 100
+
+
 def test_gap_increases_block():
     rates = [0.9, 0.8, 0.5]
     t0 = t_mem_s(HW, rates, 1e6)

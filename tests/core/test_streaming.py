@@ -1,0 +1,209 @@
+"""ISSUE-2 tentpole: streaming pipeline vs in-memory oracle.
+
+The acceptance invariant — ``reuse_distances_streaming`` is
+bit-identical to the monolithic Fenwick pass for every window size,
+including windows that don't divide N — plus the streaming interleaver
+and incremental profile accumulation.
+"""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.reuse.distance import (
+    INF_RD,
+    reuse_distance_windows,
+    reuse_distances,
+    reuse_distances_ref,
+    reuse_distances_streaming,
+)
+from repro.core.reuse.profile import (
+    ReuseProfile,
+    profile_from_distances,
+    profile_from_distances_incremental,
+    profile_from_pairs,
+)
+from repro.core.trace.interleave import interleave_traces, interleave_windows
+from repro.core.trace.types import ChunkedTraceSource, LabeledTrace
+
+
+def mk(addrs):
+    addrs = np.asarray(addrs, dtype=np.int64)
+    return LabeledTrace(
+        addrs,
+        (np.arange(len(addrs)) % 3).astype(np.int32),
+        np.zeros(len(addrs), dtype=bool),
+    )
+
+
+def assert_profiles_equal(a: ReuseProfile, b: ReuseProfile):
+    assert np.array_equal(a.distances, b.distances)
+    assert np.array_equal(a.counts, b.counts)
+    assert a.total == b.total
+
+
+# --- reuse_distances_streaming ---------------------------------------------
+
+
+def test_table1_golden_streamed():
+    trace = [ord(c) for c in "wxwyxzzw"]
+    expected = [INF_RD, INF_RD, 1, INF_RD, 2, INF_RD, 0, 3]
+    for ws in (1, 2, 3, 8, 100):
+        assert reuse_distances_streaming(
+            trace, window_size=ws
+        ).tolist() == expected
+
+
+def test_streaming_bit_identical_across_window_sizes():
+    """The acceptance criterion: >= 3 window sizes, including ones that
+    do not divide N."""
+    rng = np.random.default_rng(7)
+    n = 5000
+    trace = rng.integers(0, 400 * 64, size=n)
+    ref = reuse_distances(trace, 64)
+    for ws in (64, 333, 1024, 4096, 8192):  # 333/4096 don't divide 5000
+        got = reuse_distances_streaming(trace, 64, window_size=ws)
+        assert np.array_equal(ref, got), ws
+
+
+def test_streaming_bit_identical_on_seed_workload_trace():
+    """Same acceptance check on a real traced workload (ATAX)."""
+    from repro.workloads.polybench import make_atax
+
+    addrs = make_atax(n=32).trace().addresses
+    ref = reuse_distances(addrs, 64)
+    for ws in (256, 1000, 4096):
+        assert np.array_equal(
+            ref, reuse_distances_streaming(addrs, 64, window_size=ws)
+        )
+
+
+def test_streaming_line_granularity_and_empty():
+    addrs = np.array([0, 8, 16, 64, 0])
+    assert reuse_distances_streaming(
+        addrs, 64, window_size=2
+    ).tolist() == [INF_RD, 0, 0, INF_RD, 1]
+    assert reuse_distances_streaming(np.empty(0, np.int64)).size == 0
+
+
+def test_streaming_accepts_labeled_trace_and_window_iterators():
+    rng = np.random.default_rng(3)
+    addrs = rng.integers(0, 2000, size=1200)
+    trace = mk(addrs)
+    assert isinstance(trace, ChunkedTraceSource)
+    ref = reuse_distances(addrs, 64)
+    got = reuse_distances_streaming(trace, 64, window_size=100)
+    assert np.array_equal(ref, got)
+    # an explicit iterator of LabeledTrace windows streams identically
+    got2 = np.concatenate(
+        list(reuse_distance_windows(trace.windows(100), 64, window_size=100))
+    )
+    assert np.array_equal(ref, got2)
+
+
+def test_streaming_window_shapes():
+    rng = np.random.default_rng(5)
+    addrs = rng.integers(0, 500, size=1000)
+    wins = list(reuse_distance_windows(addrs, window_size=300))
+    assert [len(w) for w in wins] == [300, 300, 300, 100]
+    assert np.array_equal(np.concatenate(wins), reuse_distances(addrs))
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    st.lists(st.integers(min_value=0, max_value=50), min_size=1, max_size=150),
+    st.integers(min_value=1, max_value=60),
+)
+def test_streaming_matches_oracle_property(trace, window_size):
+    t = np.asarray(trace, dtype=np.int64)
+    assert np.array_equal(
+        reuse_distances_streaming(t, window_size=window_size),
+        reuse_distances_ref(t),
+    )
+
+
+@pytest.mark.slow
+def test_streaming_large_trace_bit_identical():
+    """Large-trace regression (marked slow): many compaction cycles."""
+    rng = np.random.default_rng(11)
+    n = 120_000
+    # hot/cold mix -> realistic working set churn
+    hot = rng.integers(0, 2_000, size=n // 2)
+    cold = rng.integers(0, 200_000, size=n - n // 2)
+    trace = np.concatenate([hot, cold]) * 64
+    rng.shuffle(trace)
+    ref = reuse_distances(trace, 64)
+    for ws in (4096, 30_000):
+        assert np.array_equal(
+            ref, reuse_distances_streaming(trace, 64, window_size=ws)
+        )
+
+
+# --- incremental profiles ---------------------------------------------------
+
+
+def test_profile_incremental_equals_monolithic():
+    rng = np.random.default_rng(9)
+    addrs = rng.integers(0, 300 * 64, size=4000)
+    ref = profile_from_distances(reuse_distances(addrs, 64))
+    for ws in (128, 1000, 4096):
+        inc = profile_from_distances_incremental(
+            reuse_distance_windows(addrs, 64, window_size=ws)
+        )
+        assert_profiles_equal(ref, inc)
+    assert profile_from_distances_incremental(iter([])).total == 0
+
+
+def test_profile_merge():
+    a = profile_from_pairs([INF_RD, 1, 5], [2, 3, 1])
+    b = profile_from_pairs([1, 7], [4, 2])
+    merged = ReuseProfile.merge([a, b])
+    assert merged.distances.tolist() == [INF_RD, 1, 5, 7]
+    assert merged.counts.tolist() == [2, 7, 1, 2]
+    assert merged.total == 12
+    assert_profiles_equal(merged, a.merged_with(b))
+    assert ReuseProfile.merge([]).total == 0
+
+
+# --- streaming interleaver --------------------------------------------------
+
+
+@pytest.mark.parametrize("strategy,chunk", [
+    ("round_robin", 1), ("chunked", 3), ("chunked", 7),
+])
+def test_interleave_windows_matches_in_memory(strategy, chunk):
+    rng = np.random.default_rng(21)
+    traces = [
+        mk(rng.integers(0, 100, size=L)) for L in (83, 0, 40, 17)
+    ]
+    ref = interleave_traces(traces, strategy, chunk_size=chunk)
+    for ws in (1, 16, 37, 1000):
+        wins = list(
+            interleave_windows(
+                traces, strategy, window_size=ws, chunk_size=chunk
+            )
+        )
+        assert all(len(w) == ws for w in wins[:-1])
+        got = np.concatenate([w.addresses for w in wins])
+        assert np.array_equal(got, ref.addresses)
+        assert np.array_equal(
+            np.concatenate([w.bb_ids for w in wins]), ref.bb_ids
+        )
+
+
+def test_interleave_windows_streamed_crd_equals_in_memory_crd():
+    """End-to-end: streamed shared-trace windows -> streamed RD ->
+    incremental profile == materialize-everything profile."""
+    rng = np.random.default_rng(33)
+    traces = [mk(rng.integers(0, 5000, size=L) * 8) for L in (900, 450)]
+    shared = interleave_traces(traces, "round_robin")
+    ref = profile_from_distances(reuse_distances(shared.addresses, 64))
+    wins = interleave_windows(traces, "round_robin", window_size=256)
+    inc = profile_from_distances_incremental(
+        reuse_distance_windows(wins, 64, window_size=256)
+    )
+    assert_profiles_equal(ref, inc)
+
+
+def test_interleave_windows_rejects_uniform():
+    with pytest.raises(ValueError, match="uniform"):
+        next(interleave_windows([mk([1, 2])], "uniform"))
