@@ -5,9 +5,14 @@ and runtimes for EVERY (target x core count) cell out — without
 re-tracing.  This is PPT-Multicore's headline property (§1:
 "predictions for various core counts without having to rerun the
 application"), and the Session makes it an API invariant: each reuse
-profile is computed exactly once across the whole grid.
+profile is computed exactly once across the whole grid — and, with an
+``artifact_dir``, across *processes and runs*: the disk-backed
+ArtifactStore persists every profile under content-hash keys, so
+rerunning this script rebuilds nothing (watch ``store_hits`` flip
+from 0 to 4 on the second invocation).
 
     PYTHONPATH=src python examples/quickstart.py
+    PYTHONPATH=src python examples/quickstart.py   # all cells from disk
 """
 from repro.api import PredictionRequest, Session
 from repro.hw.targets import CPU_TARGETS
@@ -21,8 +26,12 @@ print(f"traced {workload.name}: {len(trace):,} refs, "
       f"{trace.shared_mask.mean():.0%} shared")
 
 # 2. One declarative request: every target x core count from that
-#    single trace, executed by a caching Session.
-session = Session()
+#    single trace, executed by a caching Session.  The cache is NOT
+#    per-process: artifact_dir layers a disk-backed store (atomic,
+#    content-hash-keyed npz) under the in-memory dicts, so profiles
+#    built here are reused by every later process that points at the
+#    same directory — docs/architecture.md, repro/validate/store.py.
+session = Session(artifact_dir=".cache/quickstart-artifacts")
 request = PredictionRequest(
     targets=tuple(CPU_TARGETS),          # registry names work too
     core_counts=(1, 2, 4, 8),
@@ -32,7 +41,8 @@ result = session.predict(trace, request)
 print()
 print(result.to_table())
 print(f"\nartifact cache: {session.stats.profile_builds} profile builds, "
-      f"{session.stats.profile_hits} cache hits across "
+      f"{session.stats.profile_hits} in-memory hits, "
+      f"{session.stats.store_hits} disk-store hits across "
       f"{len(result)} grid cells")
 
 # 3. Validate one point against the exact LRU simulator (PAPI stand-in)

@@ -16,6 +16,15 @@ exactly once across ALL targets (the three Table-5 CPUs share 64-byte
 lines; the TPU's 512-byte VMEM granule adds one more profile set, not
 a new pipeline).  ``Session.stats`` exposes build/hit counters — tests
 assert the compute-once property instead of trusting it.
+
+The in-memory caches are process-local; ``Session(artifact_dir=...)``
+(or ``store=ArtifactStore(...)``) transparently layers a disk-backed
+store *under* them: a profile missing from memory is loaded from disk
+before being rebuilt, and every freshly built profile is written back
+— so repeated sweeps are incremental across processes and runs
+(``repro.validate.store``).  Lookup order per cell:
+
+    in-memory dict  ->  ArtifactStore (npz on disk)  ->  build + put
 """
 from __future__ import annotations
 
@@ -48,6 +57,8 @@ class SessionStats:
     profile_builds: int = 0
     profile_hits: int = 0
     streaming_builds: int = 0
+    store_hits: int = 0     # profiles served from the disk store
+    store_puts: int = 0     # freshly built profiles written back
 
     def reset(self) -> None:
         for f in dataclasses.fields(self):
@@ -62,6 +73,13 @@ class Session:
     same request produces ground-truth or alternative-model grids.
     ``cache=False`` disables artifact reuse (the legacy per-call cost
     model — used by the deprecated shim and the benchmark baseline).
+
+    ``artifact_dir`` (or an explicit ``store``) layers a disk-backed
+    :class:`repro.validate.store.ArtifactStore` under the in-memory
+    caches: profiles survive the process, so a second run over the
+    same traces performs zero reuse-profile recomputations
+    (``stats.store_hits`` counts disk loads, ``stats.store_puts``
+    write-backs).
     """
 
     def __init__(
@@ -72,6 +90,8 @@ class Session:
         runtime_model=None,
         cache: bool = True,
         window_size: int | None = None,
+        store=None,
+        artifact_dir=None,
     ):
         if profile_builder is None:
             profile_builder = MimicProfileBuilder(window_size=window_size)
@@ -80,6 +100,11 @@ class Session:
         self.cache_model = cache_model or AnalyticalSDCM()
         self.runtime_model = runtime_model  # None -> per-target default
         self.cache_enabled = cache
+        if store is None and artifact_dir is not None:
+            from repro.validate.store import ArtifactStore
+
+            store = ArtifactStore(artifact_dir)
+        self.store = store
         self.stats = SessionStats()
         self._trace_ids: dict[int, str] = {}       # id(source) -> trace_id
         # pins every cached source: id() keys are only valid while the
@@ -159,7 +184,8 @@ class Session:
 
     def artifacts(self, source, cores: int, *, strategy: str = "round_robin",
                   seed: int = 0, line_size: int = 64,
-                  window_size: int | None = None) -> ProfileArtifacts:
+                  window_size: int | None = None,
+                  need_traces: bool = False) -> ProfileArtifacts:
         """PRD/CRD profiles (+ underlying traces) for one grid cell.
 
         ``window_size`` (or the Session/builder default) routes the
@@ -167,13 +193,39 @@ class Session:
         profiles, peak scan memory bounded by the window + working set,
         and the interleaved shared trace never materialized (for the
         deterministic strategies) — ``artifacts.shared`` is ``None``.
+
+        ``need_traces`` guarantees the returned artifact carries the
+        mimicked private/shared traces: profile cells served from the
+        disk store arrive trace-less (only the histograms persist) and
+        are rematerialized through the stage caches for trace-consuming
+        models (ExactLRU ground truth).
         """
         ws = self._resolve_window(window_size)
         tid, trace = self.load(source)
         key = (tid, line_size, cores, strategy, seed, ws)
         if self.cache_enabled and key in self._profiles:
             self.stats.profile_hits += 1
-            return self._profiles[key]
+            art = self._profiles[key]
+            if need_traces and not art.privates:
+                art = self._materialize_traces(art, trace)
+                self._profiles[key] = art
+            return art
+        if self.cache_enabled and self.store is not None:
+            from repro.validate.store import (
+                builder_fingerprint,
+                load_profile_artifacts,
+            )
+
+            art = load_profile_artifacts(
+                self.store, tid, line_size, cores, strategy, seed, ws,
+                builder_fingerprint(self.builder),
+            )
+            if art is not None:
+                self.stats.store_hits += 1
+                if need_traces:
+                    art = self._materialize_traces(art, trace)
+                self._profiles[key] = art
+                return art
         if ws:
             art = self._streaming_artifacts(
                 tid, trace, cores, strategy, seed, line_size, ws
@@ -201,7 +253,34 @@ class Session:
         self.stats.profile_builds += 1
         if self.cache_enabled:
             self._profiles[key] = art
+            if self.store is not None:
+                from repro.validate.store import (
+                    builder_fingerprint,
+                    save_profile_artifacts,
+                )
+
+                save_profile_artifacts(
+                    self.store, art, builder_fingerprint(self.builder)
+                )
+                self.stats.store_puts += 1
         return art
+
+    def _materialize_traces(self, art: ProfileArtifacts,
+                            trace: LabeledTrace) -> ProfileArtifacts:
+        """Re-attach mimicked traces to a store-loaded (trace-less)
+        profile cell.  Mimicry/interleaving are cheap O(N) rebuilds and
+        go through the stage caches; the expensive profile passes are
+        NOT rerun.  Streaming cells keep ``shared=None`` (the
+        interleaved trace is never materialized on that path)."""
+        if art.cores == 1:
+            return dataclasses.replace(art, privates=[trace], shared=trace)
+        privs = self._private_traces(art.trace_id, trace, art.cores)
+        shared = art.shared
+        if shared is None and not art.window_size:
+            shared = self._shared_trace(
+                art.trace_id, privs, art.cores, art.strategy, art.seed
+            )
+        return dataclasses.replace(art, privates=privs, shared=shared)
 
     def _streaming_artifacts(self, tid, trace, cores, strategy, seed,
                              line_size, ws) -> ProfileArtifacts:
@@ -258,12 +337,14 @@ class Session:
             raise ValueError(
                 f"request matched no grid cells: {request.describe()}"
             )
+        need_traces = bool(getattr(self.cache_model, "needs_traces", False))
         arts = [
             self.artifacts(
                 source, cell.cores, strategy=cell.strategy,
                 seed=request.seed,
                 line_size=cell.target.levels[0].line_size,
                 window_size=request.window_size,
+                need_traces=need_traces,
             )
             for cell in cells
         ]
@@ -329,5 +410,6 @@ class Session:
         art = self.artifacts(
             source, cores, strategy=strategy, seed=seed,
             line_size=target.levels[0].line_size, window_size=0,
+            need_traces=True,
         )
         return ExactLRU().hit_rates(target, art)

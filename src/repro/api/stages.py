@@ -18,7 +18,7 @@ from __future__ import annotations
 
 import hashlib
 from dataclasses import dataclass, field
-from typing import Protocol, runtime_checkable
+from typing import ClassVar, Protocol, runtime_checkable
 
 import numpy as np
 
@@ -111,6 +111,11 @@ class ProfileArtifacts:
     by window and never materialized.  Profile consumers (SDCM, batched
     SDCM) only read ``prd``/``crd``; trace consumers (ExactLRU) require
     the in-memory path.
+
+    Cells loaded from a disk :class:`repro.validate.store.ArtifactStore`
+    carry only the profiles (``privates == []``, ``shared is None``) —
+    the Session rematerializes the traces on demand
+    (``Session.artifacts(..., need_traces=True)``).
     """
 
     trace_id: str
@@ -123,6 +128,12 @@ class ProfileArtifacts:
     prd: ReuseProfile
     crd: ReuseProfile
     window_size: int | None = None
+
+    @property
+    def has_traces(self) -> bool:
+        """Whether the mimicked traces are attached (False for cells
+        deserialized from the disk store)."""
+        return bool(self.privates)
 
 
 class ProfileBuilder(Protocol):
@@ -278,10 +289,19 @@ class ExactLRU:
     """
 
     name: str = field(default="exact-lru", init=False)
+    # tells Session.predict to materialize the mimicked traces even for
+    # profile cells served from the disk store
+    needs_traces: ClassVar[bool] = True
 
     def hit_rates(self, target, artifacts: ProfileArtifacts) -> dict[str, float]:
         shared_idx = shared_level_index(target)
         levels = list(target.levels)
+        if not artifacts.has_traces:
+            raise ValueError(
+                "ExactLRU simulates the materialized traces, but this "
+                "artifact carries only profiles (loaded from the disk "
+                "store) — request it with need_traces=True"
+            )
         if artifacts.cores == 1:
             res = simulate_hierarchy(artifacts.privates[0].addresses, levels)
             return {r.name: r.cumulative_hit_rate for r in res}

@@ -1,0 +1,62 @@
+"""repro.validate — disk-backed artifacts + the paper-validation harness.
+
+Three pieces (docs/validation.md is generated from their output):
+
+* :class:`~repro.validate.store.ArtifactStore` — content-hash-keyed,
+  disk-backed artifact store (npz + json, atomic writes, version-
+  stamped keys) that ``Session(artifact_dir=...)`` layers under its
+  in-memory caches, making sweeps incremental across processes/runs;
+* :func:`~repro.validate.runner.run_validation` — the multi-process
+  paper-matrix runner (workloads × Table-5 CPUs × core counts ×
+  interleave strategies) with store-mediated shard merging;
+* :func:`~repro.validate.report.generate_report` — renders the merged
+  summary into ``docs/validation.md`` against the paper's reference
+  claims (``repro.validate.reference``).
+
+CLI::
+
+    PYTHONPATH=src python -m repro.validate          # full matrix + report
+    PYTHONPATH=src python -m repro.validate --smoke  # CI double-run gate
+"""
+from repro.validate.reference import (
+    PAPER_ARCH_CLAIMS,
+    PAPER_OVERALL,
+    PAPER_TABLE4,
+    PaperClaim,
+    paper_claim,
+)
+from repro.validate.report import generate_report, render_markdown
+from repro.validate.runner import (
+    MatrixSpec,
+    run_validation,
+    run_workload,
+    save_results,
+)
+from repro.validate.store import (
+    STORE_VERSION,
+    ArtifactStore,
+    StoreStats,
+    artifact_key,
+    load_profile_artifacts,
+    save_profile_artifacts,
+)
+
+__all__ = [
+    "ArtifactStore",
+    "MatrixSpec",
+    "PAPER_ARCH_CLAIMS",
+    "PAPER_OVERALL",
+    "PAPER_TABLE4",
+    "PaperClaim",
+    "STORE_VERSION",
+    "StoreStats",
+    "artifact_key",
+    "generate_report",
+    "load_profile_artifacts",
+    "paper_claim",
+    "render_markdown",
+    "run_validation",
+    "run_workload",
+    "save_profile_artifacts",
+    "save_results",
+]

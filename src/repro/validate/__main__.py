@@ -1,0 +1,110 @@
+"""CLI for the validation harness.
+
+    python -m repro.validate                 # full matrix -> json + docs
+    python -m repro.validate --smoke         # tiny matrix twice, assert
+                                             # zero recomputes on run 2
+    python -m repro.validate --workloads atx jcb --processes 1
+
+The smoke mode is the CI gate: it runs the whole workload roster at
+tiny sizes twice against one shared artifact dir and fails loudly if
+the second run rebuilt any reuse profile (the disk store must make it
+fully incremental).
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+
+from repro.validate.report import generate_report
+from repro.validate.runner import MatrixSpec, run_validation, save_results
+from repro.workloads.polybench import MAKERS
+
+
+def main(argv: list[str] | None = None) -> int:
+    ap = argparse.ArgumentParser(prog="repro.validate")
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny sizes, run twice, assert zero recomputes")
+    ap.add_argument("--sizes", default=None,
+                    choices=["validation", "smoke", "default"],
+                    help="workload size preset (default: validation; "
+                         "'default' = the quickstart/benchmark sizes)")
+    ap.add_argument("--workloads", nargs="+", default=None,
+                    choices=sorted(MAKERS), metavar="ABBR",
+                    help="subset of workload abbreviations")
+    ap.add_argument("--artifact-dir", default=".validation-cache",
+                    help="shared disk store (cross-run incrementality + "
+                         "the worker-shard channel; default: "
+                         ".validation-cache, gitignored).  Pass 'none' "
+                         "to disable and recompute everything serially")
+    ap.add_argument("--processes", type=int, default=None)
+    ap.add_argument("--out", default=None,
+                    help="results json path (default: experiments/results/"
+                         "validation_full.json or validation_smoke.json)")
+    ap.add_argument("--report", default=None,
+                    help="markdown report path (default: docs/validation.md "
+                         "for full runs; omitted for --smoke)")
+    ap.add_argument("--no-report", action="store_true")
+    args = ap.parse_args(argv)
+
+    sizes = args.sizes or ("smoke" if args.smoke else "validation")
+    if sizes == "default":
+        sizes = None
+    if args.artifact_dir and args.artifact_dir.lower() == "none":
+        args.artifact_dir = None
+    spec = MatrixSpec(
+        workloads=tuple(args.workloads) if args.workloads else tuple(MAKERS),
+        sizes=sizes,
+    )
+    print(f"validation matrix: {spec.describe()}")
+
+    if args.smoke:
+        if not args.artifact_dir:
+            ap.error("--smoke needs --artifact-dir (the incrementality "
+                     "assertion is about the shared store)")
+        first = run_validation(spec, artifact_dir=args.artifact_dir,
+                               processes=args.processes)
+        second = run_validation(spec, artifact_dir=args.artifact_dir,
+                                processes=args.processes)
+        s2 = second["session_stats"]
+        rebuilt = s2.get("profile_builds", 0) + s2.get("rd_builds", 0)
+        summary = {
+            "mode": "smoke",
+            "first_run_stats": first["session_stats"],
+            "second_run_stats": s2,
+            "aggregates": second["aggregates"],
+            "description": second["description"],
+            "matrix_id": second["matrix_id"],
+        }
+        out = args.out or "experiments/results/validation_smoke.json"
+        save_results(summary, out)
+        print(f"wrote {out}")
+        print(f"run 1: {first['session_stats']}")
+        print(f"run 2: {s2}")
+        if rebuilt:
+            print(f"FAIL: second run rebuilt {rebuilt} profiles/distance "
+                  "passes — the artifact store is not incremental",
+                  file=sys.stderr)
+            return 1
+        print("OK: second run performed zero reuse-profile recomputations "
+              f"({s2.get('store_hits', 0)} disk-store hits)")
+        return 0
+
+    summary = run_validation(spec, artifact_dir=args.artifact_dir,
+                             processes=args.processes)
+    out = args.out or "experiments/results/validation_full.json"
+    save_results(summary, out)
+    print(f"wrote {out}")
+    agg = summary["aggregates"]["overall"]
+    print(f"overall: hit err {agg['hit_rate_err_pct']['ours']:.2f}% "
+          f"(paper {agg['hit_rate_err_pct']['paper']:.2f}%), "
+          f"runtime err {agg['runtime_err_pct']['ours']:.2f}% "
+          f"(paper {agg['runtime_err_pct']['paper']:.2f}%)")
+    if not args.no_report:
+        md = args.report or "docs/validation.md"
+        generate_report(out, md)
+        print(f"wrote {md}")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -616,3 +616,56 @@ MAKERS = {
 def all_workloads(subset: list[str] | None = None) -> list[Workload]:
     keys = subset or list(MAKERS)
     return [MAKERS[k]() for k in keys]
+
+
+# --- validation size presets ----------------------------------------------
+#
+# The paper traces standard inputs (7-335 GB of references); this
+# container's sequential Fenwick scan makes that infeasible, so the
+# validation harness (repro.validate) runs the full matrix at reduced
+# sizes that keep each trace's loop structure and shared labeling
+# intact.  "validation" targets ~8-12k references per workload (the
+# committed experiments/results/validation_full.json run); "smoke"
+# targets ~1-3k (the CI validation-smoke job).  Default maker sizes
+# (no preset) are the quickstart/benchmark sizes.
+
+SIZE_PRESETS: dict[str, dict[str, dict]] = {
+    "validation": {
+        "adi": dict(n=20, tsteps=2),
+        "atx": dict(n=48),
+        "bcg": dict(n=48),
+        "blk": dict(num_options=320),
+        "c2d": dict(n=32),
+        "cov": dict(n=20),
+        "dgn": dict(nq=8, nr=8, npp=8),
+        "dbn": dict(n=64),
+        "grm": dict(n=15),
+        "jcb": dict(n=24, tsteps=2),
+        "lu": dict(n=21),
+        "2mm": dict(n=14),
+        "mvt": dict(n=48),
+        "smm": dict(n=18),
+    },
+    "smoke": {
+        "adi": dict(n=10, tsteps=1),
+        "atx": dict(n=24),
+        "bcg": dict(n=24),
+        "blk": dict(num_options=96),
+        "c2d": dict(n=16),
+        "cov": dict(n=10),
+        "dgn": dict(nq=5, nr=5, npp=5),
+        "dbn": dict(n=32),
+        "grm": dict(n=8),
+        "jcb": dict(n=12, tsteps=1),
+        "lu": dict(n=12),
+        "2mm": dict(n=8),
+        "mvt": dict(n=24),
+        "smm": dict(n=10),
+    },
+}
+
+
+def make_workload(abbr: str, sizes: str | None = None) -> Workload:
+    """Build one workload at a named size preset (None = defaults)."""
+    kwargs = SIZE_PRESETS[sizes].get(abbr, {}) if sizes else {}
+    return MAKERS[abbr](**kwargs)

@@ -1,0 +1,248 @@
+"""ArtifactStore semantics (ISSUE-3 satellite): round-trips for every
+artifact kind, cross-process-style cache hits via two Sessions sharing
+one store, corruption/partial-write recovery, and version-bump key
+invalidation."""
+from __future__ import annotations
+
+import numpy as np
+import pytest
+
+from repro.api import (
+    ExactLRU,
+    MimicProfileBuilder,
+    PredictionRequest,
+    Session,
+)
+from repro.core.trace.types import trace_from_blocks
+from repro.validate.store import (
+    STORE_VERSION,
+    ArtifactStore,
+    artifact_key,
+    load_profile_artifacts,
+    save_profile_artifacts,
+)
+
+TARGETS = ("i7-5960X", "Xeon E5-2699 v4")
+
+
+def small_trace(iters=300, stride=8):
+    blocks = [("OUT__1__.entry", np.array([0, 8]), True)]
+    A0, B0 = 1 << 20, 2 << 20
+    for i in range(iters):
+        blocks.append((
+            "OUT__1__.for.body",
+            np.array([A0 + stride * i, B0 + stride * (i % 64), 0]),
+            np.array([False, False, True]),
+        ))
+    return trace_from_blocks(blocks)
+
+
+def request(cores=(1, 2, 4)):
+    return PredictionRequest(
+        targets=TARGETS, core_counts=cores, respect_core_limit=False
+    )
+
+
+# --- raw payload round-trips -------------------------------------------------
+
+
+def test_arrays_round_trip_with_meta(tmp_path):
+    store = ArtifactStore(tmp_path)
+    arrays = {
+        "a": np.arange(7, dtype=np.int64),
+        "b": np.array([[1.5, -2.0]], dtype=np.float64),
+    }
+    meta = {"cores": 4, "strategy": "round_robin", "nested": {"x": 1}}
+    store.put_arrays("profile", "k1", arrays, meta)
+    got_arrays, got_meta = store.get_arrays("profile", "k1")
+    assert got_meta == meta
+    for name in arrays:
+        np.testing.assert_array_equal(got_arrays[name], arrays[name])
+    assert store.stats.puts == 1 and store.stats.hits == 1
+
+
+def test_json_round_trip_and_miss(tmp_path):
+    store = ArtifactStore(tmp_path)
+    obj = {"L1": 0.99, "L2": 0.75, "L3": 0.5}
+    store.put_json("exact", "cell", obj)
+    assert store.get_json("exact", "cell") == obj
+    assert store.get_json("exact", "absent") is None
+    assert store.get_arrays("profile", "absent") is None
+    assert store.stats.misses == 2
+    assert store.keys("exact") == ["cell"]
+
+
+def test_profile_artifacts_round_trip(tmp_path):
+    """Every field of a ProfileArtifacts cell survives the npz trip
+    (traces intentionally excluded)."""
+    store = ArtifactStore(tmp_path)
+    session = Session()
+    art = session.artifacts(small_trace(), 4, strategy="round_robin")
+    save_profile_artifacts(store, art)
+    loaded = load_profile_artifacts(
+        store, art.trace_id, art.line_size, art.cores, art.strategy,
+        art.seed, art.window_size,
+    )
+    assert loaded is not None
+    assert not loaded.has_traces  # traces never persisted
+    assert (loaded.trace_id, loaded.cores, loaded.strategy,
+            loaded.seed, loaded.line_size) == (
+        art.trace_id, art.cores, art.strategy, art.seed, art.line_size)
+    for name in ("prd", "crd"):
+        a, b = getattr(art, name), getattr(loaded, name)
+        np.testing.assert_array_equal(a.distances, b.distances)
+        np.testing.assert_array_equal(a.counts, b.counts)
+        assert a.total == b.total
+
+
+# --- Session layering --------------------------------------------------------
+
+
+def test_two_sessions_share_one_store(tmp_path):
+    """The acceptance property: a second Session (a second process in
+    real runs) rebuilds nothing — profiles come off disk, predictions
+    are identical, and the counters prove it."""
+    store = ArtifactStore(tmp_path)
+    trace = small_trace()
+    s1 = Session(store=store)
+    r1 = s1.predict(trace, request())
+    assert s1.stats.profile_builds > 0
+    assert s1.stats.store_puts == s1.stats.profile_builds
+    assert s1.stats.store_hits == 0
+
+    s2 = Session(store=store)
+    r2 = s2.predict(trace, request())
+    assert s2.stats.profile_builds == 0
+    assert s2.stats.rd_builds == 0
+    assert s2.stats.mimic_builds == 0
+    assert s2.stats.store_hits == s1.stats.profile_builds
+    for a, b in zip(r1, r2):
+        assert a.hit_rates == b.hit_rates
+
+
+def test_different_builders_never_share_store_entries(tmp_path):
+    """Profiles are keyed by the producing builder's fingerprint: a
+    Session with a custom stage-2 builder must not be served another
+    builder's profiles off disk."""
+    store = ArtifactStore(tmp_path)
+    trace = small_trace()
+    s1 = Session(store=store)
+    s1.artifacts(trace, 2)
+
+    class OtherBuilder(MimicProfileBuilder):
+        pass
+
+    s2 = Session(store=store, profile_builder=OtherBuilder())
+    s2.artifacts(trace, 2)
+    assert s2.stats.store_hits == 0          # no cross-builder serving
+    assert s2.stats.profile_builds == 1
+    # same builder class -> shared entries, as before
+    s3 = Session(store=store)
+    s3.artifacts(trace, 2)
+    assert s3.stats.store_hits == 1 and s3.stats.profile_builds == 0
+
+
+def test_artifact_dir_constructs_store(tmp_path):
+    s = Session(artifact_dir=tmp_path / "cache")
+    assert isinstance(s.store, ArtifactStore)
+    s.artifacts(small_trace(), 2)
+    assert s.stats.store_puts == 1
+    assert (tmp_path / "cache" / f"v{STORE_VERSION}" / "profile").is_dir()
+
+
+def test_ground_truth_rematerializes_traces_from_store_hit(tmp_path):
+    """A store-served (trace-less) cell still supports ExactLRU ground
+    truth: the Session rebuilds the mimicked traces (cheap) without
+    rerunning any profile pass."""
+    store = ArtifactStore(tmp_path)
+    trace = small_trace()
+    s1 = Session(store=store)
+    gt1 = s1.ground_truth_hit_rates(trace, TARGETS[0], 4)
+
+    s2 = Session(store=store)
+    gt2 = s2.ground_truth_hit_rates(trace, TARGETS[0], 4)
+    assert gt2 == pytest.approx(gt1)
+    assert s2.stats.profile_builds == 0
+    assert s2.stats.store_hits == 1
+    assert s2.stats.mimic_builds == 1  # traces rebuilt, profiles not
+
+
+def test_exact_lru_predict_over_store_hits(tmp_path):
+    """ExactLRU as the Session cache model declares needs_traces, so
+    predict() materializes traces even for disk-served cells."""
+    store = ArtifactStore(tmp_path)
+    trace = small_trace()
+    Session(store=store).predict(trace, request(cores=(2,)))
+
+    s = Session(store=store, cache_model=ExactLRU())
+    result = s.predict(trace, request(cores=(2,)))
+    assert s.stats.profile_builds == 0
+    gt = Session().ground_truth_hit_rates(trace, TARGETS[0], 2)
+    assert result.one(target=TARGETS[0]).hit_rates == pytest.approx(gt)
+
+
+# --- durability --------------------------------------------------------------
+
+
+def test_truncated_file_falls_back_to_recompute(tmp_path):
+    """Partial-write recovery: a truncated npz reads as a miss, is
+    deleted, and the recompute heals the store."""
+    store = ArtifactStore(tmp_path)
+    trace = small_trace()
+    s1 = Session(store=store)
+    art = s1.artifacts(trace, 4)
+    path = store.path(
+        "profile",
+        artifact_key(art.trace_id, art.line_size, 4, "round_robin", 0, None),
+        "npz",
+    )
+    blob = path.read_bytes()
+    path.write_bytes(blob[: len(blob) // 2])  # simulate a torn write
+
+    s2 = Session(store=store)
+    art2 = s2.artifacts(trace, 4)
+    assert s2.stats.profile_builds == 1          # recomputed, not crashed
+    assert s2.stats.store_hits == 0
+    assert store.stats.corrupt == 1
+    np.testing.assert_array_equal(art2.crd.distances, art.crd.distances)
+    np.testing.assert_array_equal(art2.crd.counts, art.crd.counts)
+
+    s3 = Session(store=store)                    # healed by the rewrite
+    s3.artifacts(trace, 4)
+    assert s3.stats.store_hits == 1 and s3.stats.profile_builds == 0
+
+
+def test_corrupt_json_reads_as_miss(tmp_path):
+    store = ArtifactStore(tmp_path)
+    store.put_json("exact", "cell", {"L1": 0.5})
+    store.path("exact", "cell", "json").write_text("{not json")
+    assert store.get_json("exact", "cell") is None
+    assert store.stats.corrupt == 1
+    assert not store.path("exact", "cell", "json").exists()
+
+
+def test_version_bump_invalidates_keys(tmp_path):
+    """Entries written under one store version are unreachable after a
+    version bump — stale formats are orphaned, never misread."""
+    old = ArtifactStore(tmp_path, version=STORE_VERSION)
+    trace = small_trace()
+    s1 = Session(store=old)
+    s1.artifacts(trace, 4)
+
+    bumped = ArtifactStore(tmp_path, version=STORE_VERSION + 1)
+    s2 = Session(store=bumped)
+    s2.artifacts(trace, 4)
+    assert s2.stats.store_hits == 0
+    assert s2.stats.profile_builds == 1          # rebuilt under the new key
+    # old entries untouched on disk; new version has its own namespace
+    assert old.keys("profile") and bumped.keys("profile")
+    assert (tmp_path / f"v{STORE_VERSION}").is_dir()
+    assert (tmp_path / f"v{STORE_VERSION + 1}").is_dir()
+
+
+def test_atomic_write_leaves_no_temp_files(tmp_path):
+    store = ArtifactStore(tmp_path)
+    store.put_arrays("profile", "k", {"a": np.arange(3)}, {})
+    store.put_json("exact", "k", {"x": 1})
+    leftovers = [p for p in tmp_path.rglob("*.tmp")]
+    assert leftovers == []
