@@ -13,12 +13,24 @@
 
 One trace in; the whole (target x cores x strategy x mode) grid out,
 with every reuse profile computed exactly once (``session.stats``).
-``Session(window_size=...)`` routes the reuse-distance passes through
-the streaming layer — bit-identical profiles with peak scan memory
-bounded by O(window + working set) instead of O(trace)
-(docs/streaming.md).  The legacy
-``repro.core.predictor.PPTMulticorePredictor`` is a deprecated shim
-over this package (docs/api_migration.md).
+
+Orthogonal knobs layered on the same Session:
+
+* ``Session(artifact_dir=...)`` puts a disk-backed, content-hash-keyed
+  :class:`repro.validate.store.ArtifactStore` under the in-memory
+  caches, so profiles persist across processes and runs
+  (``stats.store_hits`` / ``stats.store_puts``).
+* ``Session(window_size=...)`` routes the reuse-distance passes
+  through the streaming layer — bit-identical profiles with peak scan
+  memory bounded by O(window + working set) instead of O(trace)
+  (docs/streaming.md).
+* ``Session.predict_many`` evaluates many independent requests with
+  one cache-model grid call — the coalescible surface the concurrent
+  prediction service (:mod:`repro.service`, docs/service.md)
+  microbatches through.
+
+The legacy ``repro.core.predictor.PPTMulticorePredictor`` is a
+deprecated shim over this package (docs/api_migration.md).
 """
 from repro.api.request import GridCell, PredictionRequest
 from repro.api.results import CellPrediction, PredictionSet

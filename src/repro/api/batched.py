@@ -9,9 +9,17 @@ every grid cell is padded into one ``[G, M]`` array and a single
 
 Per-row associativity is a *traced* scalar: the log-space binomial term
 sum runs over a static ``A_MAX`` lane axis and masks ``k >= assoc``,
-which keeps one compilation per (A_MAX bucket, M bucket) rather than
-one per geometry.  Fully-associative rows (the TPU VMEM level) take
-the exact stack-rule branch ``P(h|D) = [D < B]``.
+which keeps one compilation per (A_MAX bucket, M bucket, G bucket)
+rather than one per geometry.  Fully-associative rows (the TPU VMEM
+level) take the exact stack-rule branch ``P(h|D) = [D < B]``.
+
+Evaluation is **composition-invariant**: every row's (A_MAX, M) shape
+is derived from that row alone and row counts are padded to powers of
+two, so the bits a profile evaluates to are identical whether it runs
+in a lone single-request grid or coalesced with arbitrary other
+requests (``Session.predict_many``, the ``repro.service``
+microbatcher) — the property behind the service's "bit-identical to
+sequential ``Session.predict``" guarantee.
 """
 from __future__ import annotations
 
@@ -79,15 +87,22 @@ def _bucket(n: int, buckets=_A_BUCKETS) -> int:
     )
 
 
-def pack_profiles(profiles) -> tuple[np.ndarray, np.ndarray]:
+def _pow2(n: int) -> int:
+    return 1 << max(n - 1, 1).bit_length()
+
+
+def pack_profiles(profiles, m: int | None = None
+                  ) -> tuple[np.ndarray, np.ndarray]:
     """Pad a list of ReuseProfiles into (distances [G, M], probs [G, M]).
 
     Padding rows with distance 0 / probability 0 — padded entries
-    contribute nothing to the Eq. 3 dot product.
+    contribute nothing to the Eq. 3 dot product.  ``m`` overrides the
+    padded width (callers grouping rows for composition-invariant
+    evaluation pass each row's own pow2 width).
     """
-    m = max((len(p.distances) for p in profiles), default=1)
-    # round M up so repeated sweeps reuse one compiled kernel
-    m = 1 << max(m - 1, 1).bit_length()
+    if m is None:
+        # round M up so repeated sweeps reuse one compiled kernel
+        m = _pow2(max((len(p.distances) for p in profiles), default=1))
     d = np.zeros((len(profiles), m), dtype=np.float32)
     pr = np.zeros((len(profiles), m), dtype=np.float32)
     for g, p in enumerate(profiles):
@@ -110,9 +125,30 @@ def batched_phit(d: np.ndarray, assoc: np.ndarray, blocks: np.ndarray):
     return np.asarray(phit)
 
 
+def _row_shape_key(prof, assoc: int, blocks: int) -> tuple[int, int]:
+    """The (a_max bucket, padded M) this row is evaluated under.
+
+    Derived from the ROW alone — never from what else is in the call —
+    so a profile's evaluated bits are identical whether it runs in a
+    single-request grid or coalesced into a service batch
+    (``Session.predict_many`` / ``repro.service``).  Fully-associative
+    rows take the exact stack-rule branch; their lane axis is
+    irrelevant, so they share the smallest bucket.
+    """
+    a_max = _bucket(int(assoc)) if assoc < blocks else _A_BUCKETS[0]
+    return a_max, _pow2(max(len(prof.distances), 1))
+
+
 def batched_hit_rates(items) -> list[dict[str, float]]:
     """Evaluate SDCM for every level of every (target, artifacts) cell
-    in one jitted call.  Returns one {level: hit_rate} dict per cell."""
+    in one vmapped+jitted call per row shape.  Returns one
+    {level: hit_rate} dict per cell.
+
+    Rows are grouped by :func:`_row_shape_key` and the row count of
+    each group is padded to a power of two, so both the compiled-kernel
+    set AND each row's numerics are independent of batch composition:
+    coalesced results are bit-identical to per-request evaluation.
+    """
     from repro.api.stages import shared_level_index
 
     rows = []           # (cell index, level name, profile, assoc, blocks)
@@ -126,17 +162,31 @@ def batched_hit_rates(items) -> list[dict[str, float]]:
     if not rows:
         return [{} for _ in items]
 
-    d, pr = pack_profiles([r[2] for r in rows])
-    assoc = np.array([r[3] for r in rows], dtype=np.float32)
-    blocks = np.array([r[4] for r in rows], dtype=np.float32)
-    finite = [int(a) for a, b in zip(assoc, blocks) if a < b]
-    a_max = _bucket(max(finite, default=1))
-    rates = np.asarray(
-        _grid_fn(a_max)(
-            jnp.asarray(d), jnp.asarray(pr),
-            jnp.asarray(assoc), jnp.asarray(blocks),
+    groups: dict[tuple[int, int], list[int]] = {}
+    for ri, (_ci, _name, prof, assoc, blocks) in enumerate(rows):
+        groups.setdefault(_row_shape_key(prof, assoc, blocks), []).append(ri)
+
+    rates = np.zeros(len(rows), dtype=np.float64)
+    for (a_max, m), idxs in groups.items():
+        d, pr = pack_profiles([rows[i][2] for i in idxs], m)
+        assoc = np.array([rows[i][3] for i in idxs], dtype=np.float32)
+        blocks = np.array([rows[i][4] for i in idxs], dtype=np.float32)
+        # pad G to pow2 with inert rows (probs 0) so the number of
+        # compiled kernels stays bounded as batch sizes vary
+        g = _pow2(len(idxs))
+        if g > len(idxs):
+            pad = g - len(idxs)
+            d = np.pad(d, ((0, pad), (0, 0)))
+            pr = np.pad(pr, ((0, pad), (0, 0)))
+            assoc = np.pad(assoc, (0, pad), constant_values=1.0)
+            blocks = np.pad(blocks, (0, pad), constant_values=2.0)
+        out = np.asarray(
+            _grid_fn(a_max)(
+                jnp.asarray(d), jnp.asarray(pr),
+                jnp.asarray(assoc), jnp.asarray(blocks),
+            )
         )
-    )
+        rates[idxs] = out[:len(idxs)]
     # empty-profile rows (total == 0) follow the oracle: hit rate 0
     empty = np.array([r[2].total == 0 for r in rows])
     rates = np.where(empty, 0.0, rates)

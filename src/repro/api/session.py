@@ -25,6 +25,10 @@ before being rebuilt, and every freshly built profile is written back
 (``repro.validate.store``).  Lookup order per cell:
 
     in-memory dict  ->  ArtifactStore (npz on disk)  ->  build + put
+
+``predict_many`` evaluates many independent requests through one
+cache-model grid call — the coalescible surface the concurrent
+prediction service (:mod:`repro.service`) microbatches through.
 """
 from __future__ import annotations
 
@@ -331,31 +335,66 @@ class Session:
     def predict(self, source, request: PredictionRequest) -> PredictionSet:
         """Execute the full grid; hit rates evaluated in one batched
         call when the cache model supports grids."""
-        tid, _trace = self.load(source)
-        cells = list(request.cells())
-        if not cells:
-            raise ValueError(
-                f"request matched no grid cells: {request.describe()}"
-            )
+        return self.predict_many([(source, request)])[0]
+
+    def predict_many(
+        self, items: list[tuple[object, PredictionRequest]]
+    ) -> list[PredictionSet]:
+        """Execute many independent (source, request) pairs with ONE
+        cache-model grid evaluation across all of them.
+
+        This is the coalescible surface the prediction service batches
+        through (:mod:`repro.service`): every grid cell of every request
+        is gathered (profiles served from the Session caches / disk
+        store as usual) and the whole union goes to
+        ``cache_model.hit_rates_grid`` — with the batched SDCM backend
+        that is a single vmapped, jitted kernel call for N requests
+        instead of N per-request loops.  Results are fanned back out in
+        input order, bit-identical to ``[predict(s, r) for s, r in
+        items]``.
+        """
         need_traces = bool(getattr(self.cache_model, "needs_traces", False))
-        arts = [
-            self.artifacts(
-                source, cell.cores, strategy=cell.strategy,
-                seed=request.seed,
-                line_size=cell.target.levels[0].line_size,
-                window_size=request.window_size,
-                need_traces=need_traces,
-            )
-            for cell in cells
-        ]
-        items = [(cell.target, art) for cell, art in zip(cells, arts)]
+        plans = []
+        flat: list[tuple[object, ProfileArtifacts]] = []
+        for source, request in items:
+            tid, _trace = self.load(source)
+            cells = list(request.cells())
+            if not cells:
+                raise ValueError(
+                    f"request matched no grid cells: {request.describe()}"
+                )
+            arts = [
+                self.artifacts(
+                    source, cell.cores, strategy=cell.strategy,
+                    seed=request.seed,
+                    line_size=cell.target.levels[0].line_size,
+                    window_size=request.window_size,
+                    need_traces=need_traces,
+                )
+                for cell in cells
+            ]
+            plans.append((tid, request, cells, arts))
+            flat.extend((cell.target, art) for cell, art in zip(cells, arts))
+
         if hasattr(self.cache_model, "hit_rates_grid"):
-            rate_dicts = self.cache_model.hit_rates_grid(items)
+            rate_dicts = self.cache_model.hit_rates_grid(flat)
         else:
             rate_dicts = [
-                self.cache_model.hit_rates(t, a) for t, a in items
+                self.cache_model.hit_rates(t, a) for t, a in flat
             ]
 
+        out: list[PredictionSet] = []
+        offset = 0
+        for tid, request, cells, arts in plans:
+            rates_slice = rate_dicts[offset:offset + len(cells)]
+            offset += len(cells)
+            out.append(
+                self._assemble(tid, request, cells, arts, rates_slice)
+            )
+        return out
+
+    def _assemble(self, tid, request, cells, arts, rate_dicts
+                  ) -> PredictionSet:
         predictions = []
         for cell, art, rates in zip(cells, arts, rate_dicts):
             timing = {}

@@ -13,9 +13,11 @@ only the writer loop differs (documented in DESIGN.md §8).
 """
 from __future__ import annotations
 
+import errno
 import json
 import re
 import shutil
+import tempfile
 import threading
 from pathlib import Path
 from typing import Any
@@ -48,13 +50,18 @@ def _flatten_with_names(tree):
 
 def save_checkpoint(directory: str | Path, step: int, state: Any,
                     axes_tree: Any = None) -> Path:
-    """Write ``state`` under ``directory/step_<n>`` atomically."""
+    """Write ``state`` under ``directory/step_<n>`` atomically.
+
+    The staging directory name is unique per writer (a fixed name would
+    let two concurrent savers of the same step interleave partial
+    files); whichever writer renames into place first wins, the loser
+    discards its staging copy."""
     directory = Path(directory)
+    directory.mkdir(parents=True, exist_ok=True)
     final = directory / f"step_{step:08d}"
-    tmp = directory / f".tmp_step_{step:08d}"
-    if tmp.exists():
-        shutil.rmtree(tmp)
-    tmp.mkdir(parents=True)
+    tmp = Path(tempfile.mkdtemp(
+        dir=directory, prefix=f".tmp_step_{step:08d}."
+    ))
 
     names, leaves, treedef = _flatten_with_names(state)
     if axes_tree is not None:
@@ -82,10 +89,41 @@ def save_checkpoint(directory: str | Path, step: int, state: Any,
     # tree structure is re-derived from the caller's abstract_state at
     # restore (named .npy leaves make the mapping explicit)
     (tmp / "manifest.json").write_text(json.dumps(manifest, indent=2))
-    if final.exists():
-        shutil.rmtree(final)
-    tmp.rename(final)
+    if not _publish(tmp, final):
+        # contended away by concurrent same-step writers; whichever
+        # won left a complete checkpoint in place — ours is redundant
+        shutil.rmtree(tmp, ignore_errors=True)
     return final
+
+
+def _publish(tmp: Path, final: Path, attempts: int = 8) -> bool:
+    """Swap a fully-staged checkpoint into place.
+
+    ``rename`` only succeeds onto a non-existent target; an occupied
+    target (EEXIST/ENOTEMPTY — the previous checkpoint of this step,
+    or a concurrent writer's) is cleared and the rename retried.  Any
+    other rename error propagates untouched — it must never trigger
+    the clear, or a persistent failure (EACCES, EXDEV, …) would
+    destroy the existing good checkpoint and then publish nothing.
+    Every rename moves a *complete* staging dir, so the final
+    directory is always some writer's whole checkpoint, never a
+    mixture."""
+    for _ in range(attempts):
+        try:
+            tmp.rename(final)
+            return True
+        except OSError as exc:
+            if exc.errno not in (errno.EEXIST, errno.ENOTEMPTY):
+                raise
+            shutil.rmtree(final, ignore_errors=True)
+    # attempts exhausted under contention: acceptable only if some
+    # concurrent writer left a complete checkpoint behind
+    if (final / "manifest.json").exists():
+        return False
+    raise OSError(
+        f"could not publish checkpoint to {final}: rename contended "
+        f"{attempts} times and no complete checkpoint is in place"
+    )
 
 
 def load_manifest(ckpt_dir: str | Path) -> dict:

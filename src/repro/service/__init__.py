@@ -1,0 +1,53 @@
+"""repro.service — concurrent prediction service with request
+coalescing.
+
+    from repro.service import PredictionService, ServiceConfig
+    from repro.api import PredictionRequest
+
+    with PredictionService(artifact_dir=".cache/artifacts") as svc:
+        fut = svc.submit(workload, PredictionRequest(
+            targets=("i7-5960X",), core_counts=(1, 4, 8),
+        ))
+        resp = fut.result()
+        print(resp.result.to_table(), resp.timing.batch_size)
+
+Many threads (or HTTP clients — ``python -m repro.service``) submit
+independent :class:`repro.api.PredictionRequest`\\ s; a microbatching
+scheduler dedups identical requests, coalesces compatible ones, and
+evaluates each batch through ONE call into the batched vmapped SDCM
+grid kernel via ``Session.predict_many``.  A shared
+``Session(artifact_dir=...)`` means a warm disk store serves reuse
+profiles with zero rebuilds across service processes.  Architecture,
+tuning knobs, and failure modes: docs/service.md.
+"""
+from repro.service.scheduler import (
+    Computation,
+    MicroBatcher,
+    PendingRequest,
+    coalesce,
+    default_key,
+    resolve_future,
+)
+from repro.service.service import (
+    PredictionService,
+    RequestTiming,
+    ServiceConfig,
+    ServiceOverloadedError,
+    ServiceResponse,
+    ServiceStats,
+)
+
+__all__ = [
+    "Computation",
+    "MicroBatcher",
+    "PendingRequest",
+    "PredictionService",
+    "RequestTiming",
+    "ServiceConfig",
+    "ServiceOverloadedError",
+    "ServiceResponse",
+    "ServiceStats",
+    "coalesce",
+    "default_key",
+    "resolve_future",
+]

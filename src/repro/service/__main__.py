@@ -1,0 +1,158 @@
+"""CLI for the concurrent prediction service.
+
+    python -m repro.service                          # serve on :8177
+    python -m repro.service --artifact-dir .cache/artifacts
+    python -m repro.service --selftest               # in-process smoke
+
+``--selftest`` is the CI gate for the documented entrypoint: it starts
+the HTTP server on an ephemeral port, hammers it with concurrent
+in-process clients (duplicate payloads included, so coalescing and
+dedup are exercised), verifies every response is bit-identical to a
+sequential ``Session.predict`` of the same request, prints a
+machine-readable summary (service/session/store counters), and exits
+non-zero on any mismatch.  With ``--artifact-dir`` the summary's
+``session.profile_builds`` shows whether profiles came off the disk
+store — a second selftest against a warm store reports zero rebuilds.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+import threading
+
+from repro.api import AnalyticalSDCM, Session
+from repro.service.client import ServiceClient
+from repro.service.server import DEFAULT_PORT, PredictionServer, build_request
+from repro.service.service import PredictionService, ServiceConfig
+from repro.workloads.polybench import make_workload
+
+SELFTEST_PAYLOADS = (
+    {"workload": "atx", "sizes": "smoke", "core_counts": [1, 2, 4]},
+    {"workload": "mvt", "sizes": "smoke", "core_counts": [1, 8],
+     "targets": ["i7-5960X"]},
+    # duplicate of the first: exercises dedup fan-out under load
+    {"workload": "atx", "sizes": "smoke", "core_counts": [1, 2, 4]},
+)
+
+
+def selftest(args) -> int:
+    config = ServiceConfig(
+        max_batch=args.max_batch, max_wait_ms=args.max_wait_ms,
+        queue_size=args.queue_size, artifact_dir=args.artifact_dir,
+    )
+    service = PredictionService(config=config)
+    clients = 6
+
+    # reference: a plain sequential Session with the same cache model —
+    # coalescing must not change a single bit of the results
+    reference = Session(cache_model=AnalyticalSDCM(backend="batched"))
+    expected = []
+    for payload in SELFTEST_PAYLOADS:
+        workload = make_workload(payload["workload"], payload.get("sizes"))
+        request = build_request(payload, workload)
+        result = reference.predict(workload, request)
+        # through the same JSON float round-trip the HTTP path uses
+        expected.append(json.loads(result.to_json())["predictions"])
+
+    failures: list[str] = []
+
+    def run_client(client: ServiceClient) -> None:
+        for payload, want in zip(SELFTEST_PAYLOADS, expected):
+            try:
+                got = client.predict(**payload)
+            except Exception as exc:  # noqa: BLE001 — collected
+                failures.append(f"{payload['workload']}: {exc}")
+                continue
+            if got["predictions"] != want:
+                failures.append(
+                    f"{payload['workload']}: response diverged from "
+                    "sequential Session.predict"
+                )
+
+    with service:
+        server = PredictionServer(service, args.host, args.port or 0)
+        server.serve_background()
+        try:
+            client = ServiceClient(server.url)
+            client.wait_ready()
+            threads = [
+                threading.Thread(target=run_client, args=(client,))
+                for _ in range(clients)
+            ]
+            for t in threads:
+                t.start()
+            for t in threads:
+                t.join()
+            stats = client.stats()
+        finally:
+            server.shutdown()
+            server.server_close()
+
+    summary = {
+        "selftest": "fail" if failures else "ok",
+        "requests": clients * len(SELFTEST_PAYLOADS),
+        "failures": failures,
+        **stats,
+    }
+    print(json.dumps(summary, indent=2, default=float))
+    if failures:
+        print(f"SELFTEST FAILED: {len(failures)} mismatches",
+              file=sys.stderr)
+        return 1
+    return 0
+
+
+def serve(args) -> int:
+    config = ServiceConfig(
+        max_batch=args.max_batch, max_wait_ms=args.max_wait_ms,
+        queue_size=args.queue_size, artifact_dir=args.artifact_dir,
+    )
+    service = PredictionService(config=config)
+    with service:
+        server = PredictionServer(
+            service, args.host, args.port, verbose=args.verbose
+        )
+        print(f"prediction service listening on {server.url}")
+        print("  try: curl -s -X POST "
+              f"{server.url}/predict -d "
+              "'{\"workload\": \"atx\", \"core_counts\": [1, 4, 8]}'")
+        try:
+            server.serve_forever()
+        except KeyboardInterrupt:
+            pass
+        finally:
+            server.server_close()
+    return 0
+
+
+def main(argv: list[str] | None = None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="repro.service",
+        description="concurrent microbatching prediction service",
+    )
+    ap.add_argument("--host", default="127.0.0.1")
+    ap.add_argument("--port", type=int, default=DEFAULT_PORT)
+    ap.add_argument("--artifact-dir", default=None,
+                    help="shared disk ArtifactStore; a warm store means "
+                         "zero profile rebuilds in this process")
+    ap.add_argument("--max-batch", type=int, default=64,
+                    help="coalesced batch budget (flush when reached)")
+    ap.add_argument("--max-wait-ms", type=float, default=5.0,
+                    help="batch collection window past the first request")
+    ap.add_argument("--queue-size", type=int, default=256,
+                    help="bounded queue depth; beyond it requests are "
+                         "shed with ServiceOverloadedError / HTTP 503")
+    ap.add_argument("--selftest", action="store_true",
+                    help="start on an ephemeral port, run concurrent "
+                         "in-process clients, verify bit-identity vs "
+                         "sequential Session.predict, exit")
+    ap.add_argument("--verbose", action="store_true")
+    args = ap.parse_args(argv)
+    if args.selftest:
+        return selftest(args)
+    return serve(args)
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,0 +1,182 @@
+"""HTTP front door for the prediction service (stdlib only).
+
+A ``ThreadingHTTPServer`` gives every client connection its own
+handler thread; all those threads funnel into the service's ONE
+bounded queue, so concurrent HTTP clients become microbatches for the
+batched SDCM kernel exactly like in-process submitters.
+
+Endpoints (JSON in/out):
+
+    POST /predict   {"workload": "atx", "sizes": "smoke",
+                     "targets": [...], "core_counts": [1, 4, 8],
+                     "strategies": ["round_robin"], "runtime": true}
+    GET  /stats     service + session + store counters
+    GET  /healthz   liveness
+
+Error mapping: bad payloads -> 400, queue-full load shed -> 503 (with
+``Retry-After``), anything else -> 500.  Workloads are resolved by
+Table-4 abbreviation through a cache, so equal (workload, sizes) specs
+share one trace object — and therefore one Session artifact set and
+one dedup key.
+"""
+from __future__ import annotations
+
+import json
+import threading
+from dataclasses import asdict
+from http.server import BaseHTTPRequestHandler, ThreadingHTTPServer
+
+from repro.api import PredictionRequest
+from repro.hw.targets import ALL_TARGETS, CPU_TARGETS
+from repro.service.service import PredictionService, ServiceOverloadedError
+from repro.workloads.polybench import MAKERS, SIZE_PRESETS, make_workload
+
+DEFAULT_PORT = 8177
+
+
+class WorkloadResolver:
+    """Cached ``make_workload``: one object per (abbr, sizes) spec."""
+
+    def __init__(self):
+        self._lock = threading.Lock()
+        self._cache: dict[tuple[str, str | None], object] = {}
+
+    def get(self, abbr: str, sizes: str | None):
+        if abbr not in MAKERS:
+            raise ValueError(
+                f"unknown workload {abbr!r} (choose from "
+                f"{sorted(MAKERS)})"
+            )
+        if sizes is not None and sizes not in SIZE_PRESETS:
+            raise ValueError(
+                f"unknown size preset {sizes!r} (choose from "
+                f"{sorted(SIZE_PRESETS)} or omit for defaults)"
+            )
+        key = (abbr, sizes)
+        with self._lock:
+            if key not in self._cache:
+                self._cache[key] = make_workload(abbr, sizes)
+            return self._cache[key]
+
+
+def build_request(payload: dict, workload) -> PredictionRequest:
+    """Translate one JSON payload into a PredictionRequest.
+
+    Target names are resolved eagerly so an unknown one is a
+    ``ValueError`` here (HTTP 400), not a worker-side failure (500)."""
+    targets = tuple(payload.get("targets") or CPU_TARGETS)
+    unknown = [t for t in targets if t not in ALL_TARGETS]
+    if unknown:
+        raise ValueError(
+            f"unknown target(s) {unknown} (choose from "
+            f"{sorted(ALL_TARGETS)})"
+        )
+    window = payload.get("window_size")
+    return PredictionRequest(
+        targets=targets,
+        core_counts=tuple(payload.get("core_counts") or (1,)),
+        strategies=tuple(payload.get("strategies") or ("round_robin",)),
+        modes=tuple(payload.get("modes") or ("throughput",)),
+        counts=workload.op_counts if payload.get("runtime", True) else None,
+        seed=int(payload.get("seed", 0)),
+        window_size=int(window) if window is not None else None,
+    )
+
+
+class _Handler(BaseHTTPRequestHandler):
+    server_version = "repro-service/1"
+    protocol_version = "HTTP/1.1"
+
+    # --- plumbing ----------------------------------------------------------
+
+    @property
+    def service(self) -> PredictionService:
+        return self.server.service  # type: ignore[attr-defined]
+
+    def _reply(self, code: int, obj: dict, headers: dict | None = None):
+        blob = json.dumps(obj, default=float).encode()
+        self.send_response(code)
+        self.send_header("Content-Type", "application/json")
+        self.send_header("Content-Length", str(len(blob)))
+        for k, v in (headers or {}).items():
+            self.send_header(k, v)
+        self.end_headers()
+        self.wfile.write(blob)
+
+    def log_message(self, fmt, *args):  # quiet unless asked
+        if getattr(self.server, "verbose", False):
+            super().log_message(fmt, *args)
+
+    # --- endpoints ---------------------------------------------------------
+
+    def do_GET(self):
+        if self.path == "/healthz":
+            self._reply(200, {"ok": True})
+        elif self.path == "/stats":
+            self._reply(200, self.service.snapshot())
+        else:
+            self._reply(404, {"error": f"no such endpoint: {self.path}"})
+
+    def do_POST(self):
+        if self.path != "/predict":
+            self._reply(404, {"error": f"no such endpoint: {self.path}"})
+            return
+        try:
+            length = int(self.headers.get("Content-Length", 0))
+            payload = json.loads(self.rfile.read(length) or b"{}")
+            abbr = payload["workload"]
+            sizes = payload.get("sizes")
+            resolver = self.server.resolver  # type: ignore[attr-defined]
+            workload = resolver.get(abbr, sizes)
+            request = build_request(payload, workload)
+        except (KeyError, TypeError, ValueError) as exc:
+            self._reply(400, {"error": str(exc)})
+            return
+        try:
+            resp = self.service.predict(
+                workload, request, key=(abbr, sizes, request)
+            )
+        except ServiceOverloadedError as exc:
+            self._reply(503, {"error": str(exc)}, {"Retry-After": "1"})
+            return
+        except ValueError as exc:
+            self._reply(400, {"error": str(exc)})
+            return
+        except Exception as exc:  # noqa: BLE001 — surfaced to the client
+            self._reply(500, {"error": f"{type(exc).__name__}: {exc}"})
+            return
+        self._reply(200, {
+            "workload": abbr,
+            "sizes": sizes,
+            "cache_model": resp.result.cache_model,
+            "trace_id": resp.result.trace_id,
+            "predictions": resp.result.to_records(),
+            "timing": asdict(resp.timing),
+        })
+
+
+class PredictionServer(ThreadingHTTPServer):
+    """HTTP server bound to one PredictionService."""
+
+    daemon_threads = True
+
+    def __init__(self, service: PredictionService, host: str = "127.0.0.1",
+                 port: int = DEFAULT_PORT, *, verbose: bool = False):
+        super().__init__((host, port), _Handler)
+        self.service = service
+        self.resolver = WorkloadResolver()
+        self.verbose = verbose
+
+    @property
+    def url(self) -> str:
+        host, port = self.server_address[:2]
+        return f"http://{host}:{port}"
+
+    def serve_background(self) -> threading.Thread:
+        """Serve on a daemon thread (tests / selftest); ``shutdown()``
+        to stop."""
+        t = threading.Thread(
+            target=self.serve_forever, name="repro-service-http", daemon=True
+        )
+        t.start()
+        return t

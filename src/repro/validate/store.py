@@ -21,6 +21,11 @@ Durability rules:
 * **Corruption tolerance** — a truncated or undecodable file reads as
   a miss (counted in ``stats.corrupt``) and is deleted; the caller
   recomputes and rewrites it.
+* **Concurrent same-key safety** — every writer stages under its own
+  mkstemp name (two service workers healing one cell never interleave
+  partial bytes), and the corrupt-file cleanup re-checks the file's
+  stat identity before unlinking so it cannot delete a cell a
+  concurrent writer just healed.
 * **Version-stamped keys** — every key lives under ``v{version}``;
   bumping :data:`STORE_VERSION` (a format/semantics change) orphans
   old entries instead of misreading them.
@@ -112,9 +117,25 @@ class ArtifactStore:
             return []
         return sorted(p.stem for p in d.iterdir() if p.is_file())
 
-    def _drop_corrupt(self, path: Path) -> None:
+    def _drop_corrupt(self, path: Path, seen: os.stat_result | None) -> None:
+        """Clear a corrupt payload — unless a concurrent writer already
+        replaced it.
+
+        Between this reader's failed decode and its unlink, another
+        service worker may have healed the cell with a complete
+        rewrite; unconditionally unlinking would delete the *good*
+        file.  Comparing the pre-read stat identity (inode, mtime,
+        size) to the current one detects the swap.  The residual
+        stat-to-unlink window is benign: deleting a healed file can
+        only cost a recompute, never serve bad data.
+        """
         self.stats.corrupt += 1
         try:
+            if seen is not None:
+                cur = path.stat()
+                if ((cur.st_ino, cur.st_mtime_ns, cur.st_size)
+                        != (seen.st_ino, seen.st_mtime_ns, seen.st_size)):
+                    return  # healed since we read it — keep the new file
             path.unlink()
         except OSError:
             pass
@@ -141,7 +162,9 @@ class ArtifactStore:
     ) -> tuple[dict[str, np.ndarray], dict] | None:
         """Load (arrays, meta) for a key, or None on miss/corruption."""
         path = self.path(kind, key, "npz")
-        if not path.is_file():
+        try:
+            seen = path.stat()  # pre-read identity, guards the heal race
+        except OSError:
             self.stats.misses += 1
             return None
         try:
@@ -152,7 +175,7 @@ class ArtifactStore:
                 zipfile.BadZipFile, json.JSONDecodeError):
             # truncated/partial/undecodable file: treat as a miss and
             # clear it so the recompute's rewrite heals the store
-            self._drop_corrupt(path)
+            self._drop_corrupt(path, seen)
             self.stats.misses += 1
             return None
         self.stats.hits += 1
@@ -169,13 +192,15 @@ class ArtifactStore:
 
     def get_json(self, kind: str, key: str):
         path = self.path(kind, key, "json")
-        if not path.is_file():
+        try:
+            seen = path.stat()
+        except OSError:
             self.stats.misses += 1
             return None
         try:
             obj = json.loads(path.read_text())
         except (OSError, ValueError, json.JSONDecodeError):
-            self._drop_corrupt(path)
+            self._drop_corrupt(path, seen)
             self.stats.misses += 1
             return None
         self.stats.hits += 1

@@ -147,3 +147,55 @@ def test_ppt_predicted_deadline_integration():
                            predicted_step_s=r.t_step_bound_s, slack=3.0,
                            clock=lambda: 0.0)
     assert mon.deadline_s() == pytest.approx(1.2)
+
+
+def test_concurrent_same_step_savers_never_interleave(tmp_path):
+    """Two savers of the same step race: each stages under a unique
+    temp dir, one wins the rename, and the surviving checkpoint is
+    complete and restorable (a fixed temp name would interleave)."""
+    import threading
+
+    state = _state()
+    errors: list[BaseException] = []
+
+    def save():
+        try:
+            save_checkpoint(tmp_path, 3, state)
+        except BaseException as exc:  # noqa: BLE001 — surfaced below
+            errors.append(exc)
+
+    threads = [threading.Thread(target=save) for _ in range(4)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    assert errors == []
+    restored = restore_checkpoint(
+        tmp_path / "step_00000003",
+        jax.tree.map(lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype), state),
+    )
+    np.testing.assert_array_equal(
+        np.asarray(restored["params"]["w"]), np.asarray(state["params"]["w"])
+    )
+
+
+def test_publish_failure_does_not_destroy_existing_checkpoint(tmp_path):
+    """A persistent non-contention rename error must propagate without
+    deleting the existing good checkpoint (regression: the retry loop
+    used to rmtree `final` on ANY OSError, then report success)."""
+    import errno
+
+    from repro.runtime.checkpoint import _publish
+
+    final = tmp_path / "step_00000001"
+    save_checkpoint(tmp_path, 1, _state())
+    assert (final / "manifest.json").exists()
+
+    class BadTmp:
+        def rename(self, target):
+            raise OSError(errno.EACCES, "permission denied")
+
+    with pytest.raises(OSError) as ei:
+        _publish(BadTmp(), final)
+    assert ei.value.errno == errno.EACCES
+    assert (final / "manifest.json").exists(), "good checkpoint destroyed"

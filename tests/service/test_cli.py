@@ -1,0 +1,51 @@
+"""The documented entrypoint end-to-end (ISSUE-4 acceptance): the
+``python -m repro.service --selftest`` CLI passes, and a second service
+process pointed at the same artifact_dir performs zero profile
+rebuilds — profiles are served from the shared disk store."""
+from __future__ import annotations
+
+import json
+import os
+import subprocess
+import sys
+from pathlib import Path
+
+import pytest
+
+REPO = Path(__file__).resolve().parents[2]
+
+
+def run_selftest(artifact_dir: Path) -> dict:
+    env = dict(os.environ)
+    env["PYTHONPATH"] = str(REPO / "src") + (
+        os.pathsep + env["PYTHONPATH"] if env.get("PYTHONPATH") else ""
+    )
+    proc = subprocess.run(
+        [sys.executable, "-m", "repro.service", "--selftest",
+         "--artifact-dir", str(artifact_dir)],
+        capture_output=True, text=True, timeout=600, cwd=REPO, env=env,
+    )
+    assert proc.returncode == 0, proc.stdout + proc.stderr
+    return json.loads(proc.stdout)
+
+
+@pytest.mark.slow
+def test_second_service_process_rebuilds_nothing(tmp_path):
+    store = tmp_path / "artifacts"
+
+    first = run_selftest(store)
+    assert first["selftest"] == "ok"
+    assert first["session"]["profile_builds"] > 0
+    assert first["session"]["store_puts"] == first["session"]["profile_builds"]
+    assert first["service"]["completed"] == first["requests"]
+
+    second = run_selftest(store)
+    assert second["selftest"] == "ok"
+    # the acceptance property: a warm store means a fresh service
+    # process never rebuilds a reuse profile or distance pass
+    assert second["session"]["profile_builds"] == 0
+    assert second["session"]["rd_builds"] == 0
+    assert second["session"]["store_hits"] == first["session"]["store_puts"]
+    assert second["service"]["completed"] == second["requests"]
+    # coalescing really happened under concurrent clients
+    assert second["service"]["deduped"] > 0

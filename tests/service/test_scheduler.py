@@ -1,0 +1,276 @@
+"""Microbatcher semantics (ISSUE-4 satellite): dedup fan-out, max-wait
+partial flush, bounded-queue load shed."""
+from __future__ import annotations
+
+import threading
+import time
+from concurrent.futures import Future
+
+import numpy as np
+import pytest
+
+from repro.api import AnalyticalSDCM, PredictionRequest, Session
+from repro.core.trace.types import trace_from_blocks
+from repro.service import (
+    MicroBatcher,
+    PendingRequest,
+    PredictionService,
+    ServiceConfig,
+    ServiceOverloadedError,
+    coalesce,
+)
+
+
+def small_trace(iters=200, stride=8):
+    blocks = [("OUT__1__.entry", np.array([0, 8]), True)]
+    A0, B0 = 1 << 20, 2 << 20
+    for i in range(iters):
+        blocks.append((
+            "OUT__1__.for.body",
+            np.array([A0 + stride * i, B0 + stride * (i % 64), 0]),
+            np.array([False, False, True]),
+        ))
+    return trace_from_blocks(blocks)
+
+
+def request(targets=("i7-5960X",), cores=(1, 2)):
+    return PredictionRequest(
+        targets=targets, core_counts=cores, respect_core_limit=False
+    )
+
+
+def pending(source, req, key):
+    return PendingRequest(source, req, key, Future(), time.monotonic())
+
+
+# --- pure coalescing logic ---------------------------------------------------
+
+
+def test_coalesce_dedups_by_key_preserving_order():
+    t = small_trace()
+    r = request()
+    items = [pending(t, r, "a"), pending(t, r, "b"), pending(t, r, "a"),
+             pending(t, r, "a")]
+    comps = coalesce(items)
+    assert [c.key for c in comps] == ["a", "b"]
+    assert len(comps[0].waiters) == 3
+    assert len(comps[1].waiters) == 1
+
+
+def test_kernel_compatibility_grouping_lives_in_the_batched_kernel():
+    """The scheduler does NOT split batches by cache geometry — the
+    batched kernel buckets rows by their own (A_MAX, padded-M) shape,
+    so mixed geometries coexist in one predict_many call without
+    recompiling each other's kernels."""
+    from repro.api.batched import _row_shape_key
+    from repro.hw.targets import resolve_target
+
+    session = Session()
+    art = session.artifacts(small_trace(), 1)
+    i7 = resolve_target("i7-5960X")      # 16-way L3: bucket 16
+    tpu = resolve_target("tpu-v5e")      # fully associative: min bucket
+    key_cpu = _row_shape_key(art.prd, i7.levels[-1].effective_assoc,
+                             i7.levels[-1].num_lines)
+    key_tpu = _row_shape_key(art.prd, tpu.levels[0].effective_assoc,
+                             tpu.levels[0].num_lines)
+    assert key_cpu[0] != key_tpu[0]      # distinct jit buckets per row
+
+
+# --- MicroBatcher ------------------------------------------------------------
+
+
+def test_offer_returns_false_when_queue_full():
+    mb = MicroBatcher(lambda batch: None, max_batch=4, max_wait_s=0.01,
+                      queue_size=2)
+    t, r = small_trace(), request()
+    assert mb.offer(pending(t, r, 1))
+    assert mb.offer(pending(t, r, 2))
+    assert not mb.offer(pending(t, r, 3))  # full: caller sheds
+
+
+def test_max_wait_flushes_partial_batch():
+    """A lone request must not wait for max_batch company: the window
+    closes and the partial batch flushes."""
+    batches = []
+    done = threading.Event()
+
+    def executor(batch):
+        batches.append(len(batch))
+        done.set()
+
+    mb = MicroBatcher(executor, max_batch=64, max_wait_s=0.05,
+                      queue_size=16)
+    mb.start()
+    try:
+        t0 = time.monotonic()
+        assert mb.offer(pending(small_trace(), request(), "only"))
+        assert done.wait(timeout=5.0), "partial batch never flushed"
+        assert time.monotonic() - t0 < 4.0
+        assert batches == [1]
+    finally:
+        mb.stop()
+
+
+def test_batch_budget_flushes_before_window_closes():
+    batches = []
+    done = threading.Event()
+
+    def executor(batch):
+        batches.append(len(batch))
+        if sum(batches) == 6:
+            done.set()
+
+    # window far larger than the test budget: only max_batch can flush
+    mb = MicroBatcher(executor, max_batch=3, max_wait_s=30.0, queue_size=16)
+    t, r = small_trace(), request()
+    for i in range(6):
+        assert mb.offer(pending(t, r, i))
+    mb.start()
+    try:
+        assert done.wait(timeout=5.0)
+        assert batches == [3, 3]
+    finally:
+        mb.stop()
+
+
+# --- service-level dedup / shed ---------------------------------------------
+
+
+class GatedSDCM(AnalyticalSDCM):
+    """Blocks every grid evaluation until the test releases it."""
+
+    def __init__(self):
+        super().__init__(backend="numpy")
+        self.entered = threading.Event()
+        self.release = threading.Event()
+
+    def hit_rates_grid(self, items):
+        self.entered.set()
+        assert self.release.wait(timeout=30.0)
+        return super().hit_rates_grid(items)
+
+
+def test_duplicate_requests_compute_once_and_fan_out():
+    """K identical submissions in one batch: ONE computation, K futures
+    all carrying the same (equal-bits) result."""
+    trace, req = small_trace(), request()
+    gate = GatedSDCM()
+    service = PredictionService(
+        Session(cache_model=gate),
+        config=ServiceConfig(max_batch=32, max_wait_ms=50, queue_size=64),
+    )
+    with service:
+        plug = service.submit(small_trace(50), request(cores=(1,)))
+        assert gate.entered.wait(timeout=10.0)  # worker busy on the plug
+        gate.entered.clear()
+        futs = [service.submit(trace, req) for _ in range(5)]
+        gate.release.set()
+        responses = [f.result(timeout=30.0) for f in futs]
+        plug.result(timeout=30.0)
+
+    first = responses[0].result
+    for resp in responses[1:]:
+        for a, b in zip(first, resp.result):
+            assert a.hit_rates == b.hit_rates
+        assert resp.timing.shared
+    assert service.stats.deduped == 4
+    assert service.stats.submitted == 6
+    assert service.stats.completed == 6
+    # the 5 duplicates were one batch, one computation, one kernel call
+    assert 5 in service.stats.recent_batch_sizes
+    assert service.stats.max_batch_size == 5
+    # plug (1 cell) + the deduped request (2 core counts) — never 5x
+    assert service.session.stats.profile_builds == 3
+
+
+def test_full_queue_sheds_with_documented_error():
+    trace, req = small_trace(), request()
+    gate = GatedSDCM()
+    service = PredictionService(
+        Session(cache_model=gate),
+        config=ServiceConfig(max_batch=1, max_wait_ms=1, queue_size=2),
+    )
+    with service:
+        plug = service.submit(trace, req, key="plug")
+        assert gate.entered.wait(timeout=10.0)  # worker blocked mid-batch
+        queued = [service.submit(trace, req, key=i) for i in range(2)]
+        with pytest.raises(ServiceOverloadedError, match="queue is full"):
+            service.submit(trace, req, key="overflow")
+        assert service.stats.shed == 1
+        gate.release.set()
+        plug.result(timeout=30.0)
+        for f in queued:
+            f.result(timeout=30.0)
+    assert service.stats.completed == 3
+
+
+def test_submit_rejects_empty_grid_before_queueing():
+    service = PredictionService(config=ServiceConfig(max_wait_ms=1))
+    with service:
+        with pytest.raises(ValueError, match="no grid cells"):
+            # i7-5960X has 8 cores; respect_core_limit drops the cell
+            service.submit(small_trace(), PredictionRequest(
+                targets=("i7-5960X",), core_counts=(512,),
+            ))
+    assert service.stats.submitted == 0
+
+
+def test_submit_after_stop_raises():
+    service = PredictionService()
+    service.start()
+    service.stop()
+    with pytest.raises(RuntimeError, match="not running"):
+        service.submit(small_trace(), request())
+
+
+def test_cancelled_future_does_not_kill_worker():
+    """A caller cancelling its queued future must not wedge the
+    service: the worker skips it and keeps serving later batches."""
+    trace, req = small_trace(), request()
+    gate = GatedSDCM()
+    service = PredictionService(
+        Session(cache_model=gate),
+        config=ServiceConfig(max_batch=8, max_wait_ms=20, queue_size=64),
+    )
+    with service:
+        plug = service.submit(trace, req, key="plug")
+        assert gate.entered.wait(timeout=10.0)
+        doomed = service.submit(trace, req, key="doomed")
+        assert doomed.cancel()  # still queued: cancel succeeds
+        gate.release.set()
+        plug.result(timeout=30.0)
+        # the worker survived: a fresh request still round-trips
+        after = service.predict(trace, req, key="after", timeout=30.0)
+        assert after.result.predictions
+    assert service.stats.cancelled == 1
+    assert service.stats.completed == 2
+
+
+def test_offer_after_stop_raises_instead_of_stranding():
+    mb = MicroBatcher(lambda batch: None, max_batch=4, max_wait_s=0.01,
+                      queue_size=4)
+    mb.start()
+    mb.stop()
+    with pytest.raises(RuntimeError, match="stopped"):
+        mb.offer(pending(small_trace(50), request(), "late"))
+
+
+def test_stop_discards_strand_candidates_with_failed_futures():
+    """Belt-and-braces path: anything left in the queue after the
+    worker exits resolves with an error, never hangs its waiter."""
+    discarded = []
+    mb = MicroBatcher(lambda batch: None, max_batch=4, max_wait_s=0.01,
+                      queue_size=4, on_discard=discarded.extend)
+    item = pending(small_trace(50), request(), "stranded")
+    assert mb.offer(item)
+    # worker never started: stop() must still hand the item back
+    mb._thread = threading.Thread(target=lambda: None)
+    mb._thread.start()
+    mb.stop()
+    assert discarded == [item]
+
+    service = PredictionService(config=ServiceConfig(max_wait_ms=1))
+    service._discard([item])
+    with pytest.raises(RuntimeError, match="stopped before"):
+        item.future.result(timeout=1.0)
+    assert service.stats.failed == 1

@@ -1,0 +1,86 @@
+"""HTTP front door: endpoints, error mapping, concurrent clients."""
+from __future__ import annotations
+
+import threading
+
+import pytest
+
+from repro.service import PredictionService, ServiceConfig
+from repro.service.client import ServiceClient, ServiceError
+from repro.service.server import PredictionServer
+
+
+@pytest.fixture()
+def served():
+    service = PredictionService(
+        config=ServiceConfig(max_batch=16, max_wait_ms=10, queue_size=64)
+    )
+    with service:
+        server = PredictionServer(service, "127.0.0.1", 0)
+        server.serve_background()
+        client = ServiceClient(server.url)
+        client.wait_ready()
+        try:
+            yield service, client
+        finally:
+            server.shutdown()
+            server.server_close()
+
+
+def test_healthz_and_stats(served):
+    service, client = served
+    assert client.healthz() == {"ok": True}
+    stats = client.stats()
+    assert {"service", "session"} <= set(stats)
+    assert stats["service"]["submitted"] == 0
+
+
+def test_predict_over_http(served):
+    _service, client = served
+    out = client.predict("atx", sizes="smoke", core_counts=[1, 2],
+                         targets=["i7-5960X"])
+    assert out["workload"] == "atx"
+    assert len(out["predictions"]) == 2
+    for cell in out["predictions"]:
+        assert cell["target"] == "i7-5960X"
+        assert 0.0 <= cell["hit_rates"]["L1"] <= 1.0
+        assert cell["t_pred_s"] > 0
+    assert out["timing"]["batch_size"] >= 1
+
+
+def test_concurrent_clients_coalesce(served):
+    service, client = served
+    errors = []
+
+    def go():
+        try:
+            out = client.predict("atx", sizes="smoke", core_counts=[1, 2])
+            assert len(out["predictions"]) == 6  # 3 CPU targets x 2 cores
+        except Exception as exc:  # noqa: BLE001 — surfaced below
+            errors.append(exc)
+
+    threads = [threading.Thread(target=go) for _ in range(8)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    assert not errors
+    stats = client.stats()
+    assert stats["service"]["completed"] == 8
+    # equal specs share one workload object and one dedup key: at most
+    # a few unique computations ever ran
+    assert stats["service"]["coalesced"] <= stats["service"]["submitted"]
+    assert stats["session"]["profile_builds"] <= 2
+
+
+def test_error_mapping(served):
+    _service, client = served
+    with pytest.raises(ServiceError, match="unknown workload") as ei:
+        client.predict("nope")
+    assert ei.value.status == 400
+    with pytest.raises(ServiceError, match="unknown size preset") as ei:
+        client.predict("atx", sizes="enormous")
+    assert ei.value.status == 400
+    with pytest.raises(ServiceError) as ei:
+        client._call("/nowhere", {})
+    assert ei.value.status == 404

@@ -246,3 +246,74 @@ def test_atomic_write_leaves_no_temp_files(tmp_path):
     store.put_json("exact", "k", {"x": 1})
     leftovers = [p for p in tmp_path.rglob("*.tmp")]
     assert leftovers == []
+
+
+# --- concurrent same-key safety (ISSUE-4 satellite) --------------------------
+
+
+def test_concurrent_same_key_writers_never_interleave(tmp_path):
+    """Many threads healing the same cell simultaneously: every read
+    observes a complete, valid payload (each writer stages under its
+    own temp name; os.replace publishes whole files only)."""
+    import threading
+
+    store = ArtifactStore(tmp_path)
+    arrays = {"a": np.arange(4096, dtype=np.int64)}
+    meta = {"k": "v"}
+    stop = threading.Event()
+    problems: list[str] = []
+
+    def writer():
+        w = ArtifactStore(tmp_path)  # own stats, same directory
+        while not stop.is_set():
+            w.put_arrays("profile", "cell", arrays, meta)
+
+    def reader():
+        r = ArtifactStore(tmp_path)
+        while not stop.is_set():
+            got = r.get_arrays("profile", "cell")
+            if got is None:
+                continue  # not yet written: a miss, never an error
+            got_arrays, got_meta = got
+            if (got_meta != meta
+                    or not np.array_equal(got_arrays["a"], arrays["a"])):
+                problems.append("partial payload observed")
+                return
+
+    threads = [threading.Thread(target=writer) for _ in range(3)]
+    threads += [threading.Thread(target=reader) for _ in range(3)]
+    for t in threads:
+        t.start()
+    import time
+
+    time.sleep(1.0)
+    stop.set()
+    for t in threads:
+        t.join()
+    assert problems == []
+    got_arrays, got_meta = store.get_arrays("profile", "cell")
+    assert got_meta == meta
+    np.testing.assert_array_equal(got_arrays["a"], arrays["a"])
+
+
+def test_corrupt_cleanup_spares_concurrently_healed_file(tmp_path):
+    """The heal race: reader sees corrupt bytes, a writer replaces the
+    file with a good payload before the reader's unlink — the cleanup
+    must notice the swap and keep the healed file."""
+    store = ArtifactStore(tmp_path)
+    path = store.path("profile", "cell", "npz")
+    path.parent.mkdir(parents=True, exist_ok=True)
+    path.write_bytes(b"definitely not an npz")
+    seen = path.stat()
+
+    # concurrent writer heals the cell between read and cleanup
+    store.put_arrays("profile", "cell", {"a": np.arange(3)}, {"ok": True})
+    store._drop_corrupt(path, seen)
+    assert path.exists(), "cleanup deleted a healed cell"
+    got = store.get_arrays("profile", "cell")
+    assert got is not None and got[1] == {"ok": True}
+
+    # ...but an actually-unchanged corrupt file is still cleared
+    path.write_bytes(b"corrupt again")
+    store._drop_corrupt(path, path.stat())
+    assert not path.exists()

@@ -1,0 +1,146 @@
+"""Docs lint: every intra-repo link, referenced path, and documented
+``python -m`` entrypoint in README.md and docs/*.md must resolve.
+
+    python tools/docs_check.py            # exit 1 on any dangling ref
+
+Three checks:
+
+1. **Markdown links** — ``[text](target)`` with a non-http, non-anchor
+   target must point at an existing file/dir (resolved relative to the
+   doc, then the repo root).
+2. **Backticked paths** — `...`-quoted tokens that look like repo
+   paths (contain a ``/`` and end in a known extension, or live under
+   a top-level source dir) must exist.  A trailing ``::symbol`` is
+   stripped first.
+3. **Documented commands** — every ``python -m <module>`` must name an
+   importable module under ``src``/the repo root (spec lookup only;
+   nothing is executed here — CI smoke-runs the service CLI
+   separately).
+
+Run by the CI ``docs-check`` job and by ``tests/docs/test_docs.py``,
+so documentation drift fails the build instead of accumulating.
+"""
+from __future__ import annotations
+
+import importlib.util
+import re
+import sys
+from pathlib import Path
+
+REPO = Path(__file__).resolve().parents[1]
+
+DOC_FILES = [REPO / "README.md", *sorted((REPO / "docs").glob("*.md"))]
+
+LINK_RE = re.compile(r"\[[^\]]*\]\(([^)\s]+)\)")
+TICK_RE = re.compile(r"`([^`\n]+)`")
+PYMOD_RE = re.compile(r"python\s+(?:-\S+\s+)*-m\s+([A-Za-z_][\w.]*)")
+
+PATH_EXTS = (".py", ".md", ".json", ".yml", ".toml", ".npz", ".txt")
+PATH_ROOTS = ("src/", "docs/", "tests/", "benchmarks/", "examples/",
+              "experiments/", "tools/", ".github/")
+
+
+def iter_docs():
+    for doc in DOC_FILES:
+        if doc.is_file():
+            yield doc, doc.read_text()
+
+
+def _strip_code_fences(text: str) -> str:
+    """Fenced code blocks keep inline-path checks but not link checks
+    (they hold shell output, not markdown)."""
+    return re.sub(r"```.*?```", "", text, flags=re.S)
+
+
+def _exists(target: str, doc: Path) -> bool:
+    """Resolve against the doc's dir, the repo root, and the repo's
+    two established shorthand roots (``repro/...`` means
+    ``src/repro/...``; package-relative like ``api/batched.py`` means
+    ``src/repro/api/batched.py``)."""
+    candidates = (
+        doc.parent / target,
+        REPO / target,
+        REPO / "src" / target,
+        REPO / "src" / "repro" / target,
+    )
+    return any(c.exists() for c in candidates)
+
+
+def check_links(doc: Path, text: str) -> list[str]:
+    problems = []
+    for target in LINK_RE.findall(_strip_code_fences(text)):
+        if target.startswith(("http://", "https://", "#", "mailto:")):
+            continue
+        bare = target.split("#", 1)[0]
+        if bare and not _exists(bare, doc):
+            problems.append(f"{doc.name}: dangling link ({target})")
+    return problems
+
+
+def looks_like_path(token: str) -> bool:
+    if any(ch in token for ch in " *{}<>$(),=") or "://" in token:
+        return False
+    if token.startswith(PATH_ROOTS):
+        return True
+    return "/" in token and token.endswith(PATH_EXTS)
+
+
+def check_paths(doc: Path, text: str) -> list[str]:
+    problems = []
+    for token in TICK_RE.findall(text):
+        token = token.split("::", 1)[0].strip()
+        if not looks_like_path(token):
+            continue
+        if not _exists(token, doc):
+            problems.append(f"{doc.name}: missing path `{token}`")
+    return problems
+
+
+def check_commands(doc: Path, text: str) -> list[str]:
+    problems = []
+    for mod in PYMOD_RE.findall(text):
+        if mod == "pytest":
+            continue  # third-party, not a repo module
+        try:
+            spec = importlib.util.find_spec(mod)
+            if spec is None:
+                raise ModuleNotFoundError(mod)
+            # a runnable -m target needs __main__ (or to be a module)
+            if spec.submodule_search_locations is not None:
+                if importlib.util.find_spec(mod + ".__main__") is None:
+                    raise ModuleNotFoundError(f"{mod}.__main__")
+        except (ImportError, ModuleNotFoundError) as exc:
+            problems.append(
+                f"{doc.name}: documented command `python -m {mod}` "
+                f"does not resolve ({exc})"
+            )
+    return problems
+
+
+def run() -> list[str]:
+    sys.path.insert(0, str(REPO / "src"))
+    sys.path.insert(0, str(REPO))
+    problems: list[str] = []
+    for doc, text in iter_docs():
+        problems += check_links(doc, text)
+        problems += check_paths(doc, text)
+        problems += check_commands(doc, text)
+    return problems
+
+
+def main() -> int:
+    problems = run()
+    for p in problems:
+        print(f"DOCS-CHECK FAIL: {p}", file=sys.stderr)
+    checked = sum(1 for _ in iter_docs())
+    if problems:
+        print(f"{len(problems)} dangling reference(s) across "
+              f"{checked} docs", file=sys.stderr)
+        return 1
+    print(f"docs-check OK: {checked} docs, all links/paths/commands "
+          "resolve")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())
