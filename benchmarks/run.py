@@ -6,6 +6,8 @@
 * paper_runtimes   — Figs. 8-10 analog (Eq. 4-7 vs exact-rate runtimes)
 * reuse_throughput — §3.3.1 (tree vs stack reuse-profile throughput)
   + the Session-vs-legacy grid timing (BENCH_api_grid.json)
+  + the batched-fused profile-build benchmark (BENCH_profile.json;
+    standalone via ``-m benchmarks.reuse_throughput --profile-gate``)
 * roofline_table   — §Roofline (the cell table from the dry-run records)
 * service_load     — coalesced PredictionService vs naive per-request
   loop at 1/8/64 concurrent clients (BENCH_service.json)
@@ -67,7 +69,8 @@ def main(argv=None) -> int:
     print("\n### [2/5] runtime prediction: Eq. 4-7 (paper Figs. 8-10)\n")
     rt = paper_runtimes.run(quick=quick)
 
-    print("\n### [3/5] reuse-profile throughput (paper §3.3.1)\n")
+    print("\n### [3/5] reuse-profile throughput (paper §3.3.1) + "
+          "batched-fused profile builds\n")
     reuse_throughput.run(quick=quick)
 
     print("\n### [4/5] roofline table from dry-run records (§Roofline)\n")

@@ -84,6 +84,11 @@ class Session:
     same traces performs zero reuse-profile recomputations
     (``stats.store_hits`` counts disk loads, ``stats.store_puts``
     write-backs).
+
+    ``binned=True`` builds device-binned log2 profiles through the
+    fused ``kernels/reuse_hist`` path instead of exact histograms —
+    faster at scale, hit rates within ~1e-3 of the exact profiles, and
+    stored under distinct (builder-fingerprinted) disk keys.
     """
 
     def __init__(
@@ -94,11 +99,19 @@ class Session:
         runtime_model=None,
         cache: bool = True,
         window_size: int | None = None,
+        binned: bool = False,
         store=None,
         artifact_dir=None,
     ):
         if profile_builder is None:
-            profile_builder = MimicProfileBuilder(window_size=window_size)
+            profile_builder = MimicProfileBuilder(
+                window_size=window_size, binned=binned
+            )
+        elif binned and not getattr(profile_builder, "binned", False):
+            raise ValueError(
+                "binned=True only configures the default builder; pass a "
+                "builder with binned profile support instead"
+            )
         self.builder = profile_builder
         self.window_size = window_size
         self.cache_model = cache_model or AnalyticalSDCM()
@@ -230,18 +243,21 @@ class Session:
                     art = self._materialize_traces(art, trace)
                 self._profiles[key] = art
                 return art
+        binned = bool(getattr(self.builder, "binned", False))
         if ws:
             art = self._streaming_artifacts(
                 tid, trace, cores, strategy, seed, line_size, ws
             )
         elif cores == 1:
-            prof = profile_from_distances(
-                self._reuse_distances(tid, trace, line_size)
-            )
+            rds = self._reuse_distances(tid, trace, line_size)
+            if hasattr(self.builder, "profile_of_distances"):
+                prof = self.builder.profile_of_distances(rds)
+            else:
+                prof = profile_from_distances(rds)
             art = ProfileArtifacts(
                 trace_id=tid, cores=1, strategy=strategy, seed=seed,
                 line_size=line_size, privates=[trace], shared=trace,
-                prd=prof, crd=prof,
+                prd=prof, crd=prof, binned=binned,
             )
         else:
             privs = self._private_traces(tid, trace, cores)
@@ -252,7 +268,7 @@ class Session:
             art = ProfileArtifacts(
                 trace_id=tid, cores=cores, strategy=strategy, seed=seed,
                 line_size=line_size, privates=privs, shared=shared,
-                prd=prd, crd=crd,
+                prd=prd, crd=crd, binned=binned,
             )
         self.stats.profile_builds += 1
         if self.cache_enabled:
@@ -296,6 +312,7 @@ class Session:
         """
         self.stats.streaming_builds += 1
         builder = self.builder
+        binned = bool(getattr(builder, "binned", False))
         if hasattr(builder, "profile_windows"):
             def stream_profile(t, line):
                 return builder.profile_windows(t, line, ws)
@@ -307,7 +324,7 @@ class Session:
             return ProfileArtifacts(
                 trace_id=tid, cores=1, strategy=strategy, seed=seed,
                 line_size=line_size, privates=[trace], shared=trace,
-                prd=prof, crd=prof, window_size=ws,
+                prd=prof, crd=prof, window_size=ws, binned=binned,
             )
         privs = self._private_traces(tid, trace, cores)
         prd = stream_profile(privs[0], line_size)
@@ -327,7 +344,7 @@ class Session:
         return ProfileArtifacts(
             trace_id=tid, cores=cores, strategy=strategy, seed=seed,
             line_size=line_size, privates=privs, shared=shared,
-            prd=prd, crd=crd, window_size=ws,
+            prd=prd, crd=crd, window_size=ws, binned=binned,
         )
 
     # --- execution --------------------------------------------------------

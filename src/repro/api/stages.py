@@ -128,6 +128,9 @@ class ProfileArtifacts:
     prd: ReuseProfile
     crd: ReuseProfile
     window_size: int | None = None
+    # True when prd/crd are device-binned log2 profiles (the fused
+    # kernels/reuse_hist path) rather than exact histograms
+    binned: bool = False
 
     @property
     def has_traces(self) -> bool:
@@ -160,13 +163,32 @@ class MimicProfileBuilder:
     working set instead of the trace length.  ``None`` (the default)
     keeps the monolithic in-memory pass — the oracle the streaming path
     is tested against.
+
+    ``binned=True`` switches profile construction to the fused
+    device-binned path (:mod:`repro.core.reuse.fused`): the distance
+    stream feeds the ``kernels/reuse_hist`` Pallas histogram on device
+    and the profile is log2-binned (the kernel's bin layout, with
+    weighted-mean bin representatives).  SDCM hit rates from binned
+    profiles track the exact profiles to well under 1e-3 absolute
+    (asserted by the validation runner); the exact host path stays the
+    default oracle.
     """
 
-    window_size: int | None = None  # class default: subclasses with
-    # bare __init__ (test instrumentation) still resolve it
+    window_size: int | None = None  # class defaults: subclasses with
+    binned: bool = False            # bare __init__ (test
+    # instrumentation) still resolve them
 
-    def __init__(self, window_size: int | None = None):
+    def __init__(self, window_size: int | None = None,
+                 binned: bool = False):
         self.window_size = window_size
+        self.binned = binned
+
+    @property
+    def store_fingerprint(self) -> str:
+        """Disk-store identity: binned cells must never be confused
+        with exact cells, so the binned builder stamps its keys."""
+        base = f"{type(self).__module__}.{type(self).__qualname__}"
+        return base + ("+binned" if self.binned else "")
 
     def private_traces(self, trace, cores):
         return gen_private_traces(trace, cores)
@@ -177,9 +199,17 @@ class MimicProfileBuilder:
     def profile(self, trace, line_size):
         if self.window_size:
             return self.profile_windows(trace, line_size)
-        return profile_from_distances(
+        return self.profile_of_distances(
             reuse_distances(trace.addresses, line_size)
         )
+
+    def profile_of_distances(self, rds) -> ReuseProfile:
+        """Distances -> profile under the builder's histogram mode."""
+        if self.binned:
+            from repro.core.reuse.fused import binned_profile_from_distances
+
+            return binned_profile_from_distances(rds)
+        return profile_from_distances(rds)
 
     def profile_windows(
         self, source, line_size, window_size: int | None = None
@@ -190,6 +220,10 @@ class MimicProfileBuilder:
         ws = window_size if window_size is not None else (self.window_size or 0)
         if ws < 1:
             raise ValueError("profile_windows needs window_size >= 1")
+        if self.binned:
+            from repro.core.reuse.fused import binned_profile_windows
+
+            return binned_profile_windows(source, line_size, window_size=ws)
         return profile_from_distances_incremental(
             reuse_distance_windows(source, line_size, window_size=ws)
         )

@@ -3,9 +3,20 @@ from repro.core.reuse.distance import (
     INF_RD,
     per_set_reuse_distances,
     reuse_distance_windows,
+    reuse_distance_windows_device,
     reuse_distances,
     reuse_distances_ref,
     reuse_distances_streaming,
+)
+from repro.core.reuse.batched import (
+    reuse_distances_batched,
+    reuse_distances_offline,
+)
+from repro.core.reuse.fused import (
+    FusedReuseHistogram,
+    binned_profile_from_distances,
+    binned_profile_windows,
+    profile_from_binned_hist,
 )
 from repro.core.reuse.profile import (
     ReuseProfile,
@@ -21,9 +32,16 @@ __all__ = [
     "INF_RD",
     "per_set_reuse_distances",
     "reuse_distance_windows",
+    "reuse_distance_windows_device",
     "reuse_distances",
+    "reuse_distances_batched",
+    "reuse_distances_offline",
     "reuse_distances_ref",
     "reuse_distances_streaming",
+    "FusedReuseHistogram",
+    "binned_profile_from_distances",
+    "binned_profile_windows",
+    "profile_from_binned_hist",
     "ReuseProfile",
     "log2_binned",
     "profile_from_distances",

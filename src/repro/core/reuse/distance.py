@@ -31,6 +31,17 @@ INF_RD: int = -1
 # against per-window dispatch overhead on current CPU backends.
 DEFAULT_WINDOW: int = 1 << 14
 
+# Above this many references, reuse_distances routes to the vectorized
+# offline engine (core/reuse/batched.py): bit-identical output, no
+# sequential scan, and no per-trace-length XLA compilation.  Below it
+# the jitted Fenwick scan is fast enough and stays the default oracle.
+RD_OFFLINE_THRESHOLD: int = 1 << 13
+
+# per_set_reuse_distances switches from the monolithic stably-
+# concatenated scan (whose O(N)-per-step timeline collapses past ~50k
+# refs) to the batched multi-segment engine above this size.
+PER_SET_BATCH_THRESHOLD: int = 1 << 15
+
 
 # ---------------------------------------------------------------------------
 # Reference oracle: classic O(N·M) LRU stack (paper's "conventional" method).
@@ -134,36 +145,99 @@ def _fenwick_rd_scan(ids: jnp.ndarray) -> jnp.ndarray:
     return rds
 
 
-def reuse_distances(addresses, line_size: int = 1) -> np.ndarray:
+def reuse_distances(addresses, line_size: int = 1, *,
+                    method: str = "auto") -> np.ndarray:
     """Reuse distances of a trace, optionally at cache-line granularity.
 
     ``line_size > 1`` maps addresses to lines first (cache prediction
     operates on line reuse, paper §3.3.2).
+
+    ``method`` selects the exact engine — all three are bit-identical:
+    ``"scan"`` is the jitted Fenwick ``lax.scan`` (the §3.3.1 oracle),
+    ``"offline"`` the vectorized order-statistics pass
+    (:mod:`.batched`), and ``"auto"`` (default) routes traces larger
+    than :data:`RD_OFFLINE_THRESHOLD` offline, where the monolithic
+    scan's O(N)-per-step timeline copy collapses its throughput.
     """
+    if method not in ("auto", "scan", "offline"):
+        raise ValueError(f"unknown reuse-distance method: {method}")
     arr = np.asarray(addresses, dtype=np.int64)
     if arr.size == 0:
         return np.empty(0, dtype=np.int64)
     if line_size > 1:
         arr = arr // line_size
+    if method == "offline" or (
+        method == "auto" and arr.size >= RD_OFFLINE_THRESHOLD
+    ):
+        from .batched import reuse_distances_offline
+
+        return reuse_distances_offline(arr)
     ids = compact_ids(arr)
     return np.asarray(_fenwick_rd_scan(jnp.asarray(ids)), dtype=np.int64)
 
 
-def per_set_reuse_distances(
+def split_by_set(
     addresses, *, line_size: int, num_sets: int
+) -> tuple[list[np.ndarray], np.ndarray]:
+    """Stable per-set decomposition of a trace.
+
+    Returns the per-set line-id segments (sets in ascending order,
+    program order preserved within each set) and the stable sort
+    ``order`` mapping concatenated segment positions back to original
+    trace positions (``out[order] = concat(per_segment_results)``).
+    Shared by the per-set distance paths and the profile benchmark so
+    the decomposition can never drift between them.
+    """
+    arr = np.asarray(addresses, dtype=np.int64)
+    lines = arr // line_size
+    sets = lines % num_sets
+    order = np.argsort(sets, kind="stable")
+    cuts = np.flatnonzero(np.diff(sets[order])) + 1
+    return np.split(lines[order], cuts), order
+
+
+def per_set_reuse_distances(
+    addresses, *, line_size: int, num_sets: int, method: str = "auto"
 ) -> np.ndarray:
     """Per-set reuse distances for set-associative LRU simulation.
 
     An access hits a ``A``-way set-associative LRU cache iff the number
     of *distinct same-set lines* touched since the last use of its line
-    is < A.  We compute this exactly in one Fenwick pass by stably
-    concatenating the per-set subtraces: within the reordered trace, the
-    window between two occurrences of a line contains only same-set
-    accesses, so the global scan yields the per-set distances.
+    is < A.  The per-set subtraces are independent, which makes this
+    the canonical batched workload:
+
+    * ``method="monolithic"`` stably concatenates the subtraces and
+      runs ONE global Fenwick scan (within the reordered trace, the
+      window between two occurrences of a line contains only same-set
+      accesses) — exact, but the O(N) timeline makes each scan step
+      cost O(N) on XLA:CPU;
+    * ``method="batched"`` hands each set's subtrace to
+      :func:`repro.core.reuse.batched.reuse_distances_batched`, which
+      scans whole shape buckets of sets in parallel per dispatch;
+    * ``"auto"`` (default) uses the batched engine once the trace
+      exceeds :data:`PER_SET_BATCH_THRESHOLD` references.
+
+    All methods are bit-identical.
     """
+    if method not in ("auto", "monolithic", "batched"):
+        raise ValueError(f"unknown per-set method: {method}")
     arr = np.asarray(addresses, dtype=np.int64)
     if arr.size == 0:
         return np.empty(0, dtype=np.int64)
+    if method == "batched" or (
+        method == "auto"
+        and num_sets > 1
+        and arr.size >= PER_SET_BATCH_THRESHOLD
+    ):
+        from .batched import reuse_distances_batched
+
+        segments, order = split_by_set(
+            arr, line_size=line_size, num_sets=num_sets
+        )
+        rds = reuse_distances_batched(segments)
+        out = np.empty(arr.size, dtype=np.int64)
+        out[order] = np.concatenate(rds) if rds else np.empty(0, np.int64)
+        return out
     lines = arr // line_size
     sets = lines % num_sets
     order = np.argsort(sets, kind="stable")
@@ -218,7 +292,13 @@ class _IdMap:
                 np.arange(self.n, self.n + new.size, dtype=np.int32),
             )
             self.n += int(new.size)
-            pos = np.searchsorted(self._keys, keys)
+            # Fix up the already-computed positions instead of re-running
+            # a full searchsorted over all known keys: a key's index in
+            # the merged array is its index among the old keys plus the
+            # number of new keys sorting strictly before it — and for a
+            # new key the 'left' search over ``new`` is exactly its own
+            # insertion rank, so one small search covers both cases.
+            pos = pos + np.searchsorted(new, keys)
         return self._ids[pos]
 
 
@@ -346,6 +426,26 @@ def reuse_distance_windows(
     :class:`ReuseProfile` without ever materializing the O(N) distance
     array.
     """
+    for rds in reuse_distance_windows_device(
+        source, line_size, window_size=window_size
+    ):
+        yield np.asarray(rds, dtype=np.int64)
+
+
+def reuse_distance_windows_device(
+    source,
+    line_size: int = 1,
+    *,
+    window_size: int = DEFAULT_WINDOW,
+) -> Iterator[jnp.ndarray]:
+    """Device-resident variant of :func:`reuse_distance_windows`.
+
+    Yields each window's distances as the int32 device array the
+    Fenwick scan produced — the fused profile path
+    (:mod:`repro.core.reuse.fused`) feeds these straight into the
+    ``kernels/reuse_hist`` histogram, so a streaming profile build
+    never materializes distances host-side.
+    """
     if window_size < 1:
         raise ValueError("window_size must be >= 1")
     idmap = _IdMap()
@@ -360,7 +460,7 @@ def reuse_distance_windows(
     ):
         w = int(awin.size)
         if w == 0:
-            yield np.empty(0, dtype=np.int64)
+            yield jnp.empty(0, dtype=jnp.int32)
             continue
         ids = idmap.map(awin)
         n_ids = idmap.n
@@ -397,7 +497,7 @@ def reuse_distance_windows(
         last_time[rev_ids] = global_pos + (w - 1 - rev_idx)
         base_slot += w
         global_pos += w
-        yield np.asarray(rds, dtype=np.int64)
+        yield rds
 
 
 def reuse_distances_streaming(

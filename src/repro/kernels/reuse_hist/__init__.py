@@ -1,4 +1,9 @@
-from .ops import reuse_histogram
-from .ref import reuse_hist_ref
+from .ops import reuse_histogram, reuse_histogram_moments
+from .ref import reuse_hist_moments_ref, reuse_hist_ref
 
-__all__ = ["reuse_histogram", "reuse_hist_ref"]
+__all__ = [
+    "reuse_histogram",
+    "reuse_histogram_moments",
+    "reuse_hist_moments_ref",
+    "reuse_hist_ref",
+]

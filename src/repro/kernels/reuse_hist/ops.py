@@ -29,3 +29,27 @@ def reuse_histogram(
     w2 = jnp.pad(w, (0, padded - n)).reshape(-1, LANES)  # pad weight 0
     out = reuse_hist_pallas_2d(d2, w2, interpret=interpret)
     return out.reshape(NUM_BINS)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def reuse_histogram_moments(
+    d: jax.Array, w: jax.Array | None = None, *, interpret: bool = False
+) -> jax.Array:
+    """[2, NUM_BINS] f32: per-bin weighted counts (row 0, identical to
+    :func:`reuse_histogram`) and weighted finite-distance mass (row 1).
+
+    One fused Pallas pass — the device side of the ``binned=True``
+    profile mode: counts give P(D) per bin, the mass gives each bin's
+    weighted-mean representative distance.
+    """
+    from .reuse_hist import reuse_hist_moments_pallas_2d
+
+    d = d.astype(jnp.float32).ravel()
+    n = d.shape[0]
+    if w is None:
+        w = jnp.ones((n,), jnp.float32)
+    w = w.astype(jnp.float32).ravel()
+    padded = ((n + _TILE - 1) // _TILE) * _TILE
+    d2 = jnp.pad(d, (0, padded - n), constant_values=-1.0).reshape(-1, LANES)
+    w2 = jnp.pad(w, (0, padded - n)).reshape(-1, LANES)  # pad weight 0
+    return reuse_hist_moments_pallas_2d(d2, w2, interpret=interpret)

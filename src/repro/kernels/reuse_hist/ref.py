@@ -1,4 +1,4 @@
-"""Pure-jnp oracle for the reuse-histogram kernel."""
+"""Pure-jnp oracles for the reuse-histogram kernels."""
 from __future__ import annotations
 
 import jax.numpy as jnp
@@ -11,3 +11,14 @@ def reuse_hist_ref(d: jnp.ndarray, w: jnp.ndarray) -> jnp.ndarray:
     return jnp.zeros((NUM_BINS,), jnp.float32).at[bins].add(
         w.astype(jnp.float32).ravel()
     )
+
+
+def reuse_hist_moments_ref(d: jnp.ndarray, w: jnp.ndarray) -> jnp.ndarray:
+    """[2, NUM_BINS]: weighted counts and weighted distance mass."""
+    df = d.astype(jnp.float32).ravel()
+    wf = w.astype(jnp.float32).ravel()
+    bins = _bin_ids(df)
+    zeros = jnp.zeros((NUM_BINS,), jnp.float32)
+    counts = zeros.at[bins].add(wf)
+    mass = zeros.at[bins].add(wf * jnp.maximum(df, 0.0))
+    return jnp.stack([counts, mass])

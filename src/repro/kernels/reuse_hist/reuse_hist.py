@@ -69,3 +69,49 @@ def reuse_hist_pallas_2d(
         out_specs=pl.BlockSpec((1, NUM_BINS), lambda i: (0, 0)),
         interpret=interpret,
     )(d2, w2)
+
+
+def _moments_kernel(d_ref, w_ref, out_ref):
+    """Count + distance-mass histograms in one pass.
+
+    Row 0 of the accumulator is the weighted count per bin (identical
+    to :func:`_hist_kernel`); row 1 is the weighted sum of (finite)
+    distances per bin, from which the fused profile path derives each
+    bin's weighted-mean representative distance without ever reading
+    the raw stream back to the host.  Both rows fall out of ONE one-hot
+    contraction: a [2, TILE] weight matrix against the [TILE, BINS]
+    one-hot — still a single MXU op per tile.
+    """
+    i = pl.program_id(0)
+
+    @pl.when(i == 0)
+    def _init():
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+    d = d_ref[...].reshape(-1)        # [TILE]
+    w = w_ref[...].reshape(-1)        # [TILE] (0 for padding)
+    bins = _bin_ids(d)                # [TILE]
+    onehot = (
+        bins[:, None] == jax.lax.broadcasted_iota(jnp.int32, (1, NUM_BINS), 1)
+    ).astype(jnp.float32)             # [TILE, BINS]
+    wd = w * jnp.maximum(d, 0.0)      # INF sentinel carries no mass
+    stacked = jnp.stack([w, wd], axis=0)  # [2, TILE]
+    out_ref[...] += stacked @ onehot      # [2, BINS]
+
+
+def reuse_hist_moments_pallas_2d(
+    d2: jax.Array, w2: jax.Array, *, interpret: bool = False
+) -> jax.Array:
+    rows, lanes = d2.shape
+    assert lanes == LANES and rows % BLOCK_ROWS == 0
+    return pl.pallas_call(
+        _moments_kernel,
+        out_shape=jax.ShapeDtypeStruct((2, NUM_BINS), jnp.float32),
+        grid=(rows // BLOCK_ROWS,),
+        in_specs=[
+            pl.BlockSpec((BLOCK_ROWS, LANES), lambda i: (i, 0)),
+            pl.BlockSpec((BLOCK_ROWS, LANES), lambda i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((2, NUM_BINS), lambda i: (0, 0)),
+        interpret=interpret,
+    )(d2, w2)

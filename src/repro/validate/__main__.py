@@ -25,9 +25,13 @@ def main(argv: list[str] | None = None) -> int:
     ap.add_argument("--smoke", action="store_true",
                     help="tiny sizes, run twice, assert zero recomputes")
     ap.add_argument("--sizes", default=None,
-                    choices=["validation", "smoke", "default"],
+                    choices=["validation", "validation-xl", "smoke",
+                             "default"],
                     help="workload size preset (default: validation; "
-                         "'default' = the quickstart/benchmark sizes)")
+                         "'validation-xl' = ~100-200k refs/workload, "
+                         "feasible via the batched reuse-distance "
+                         "engines; 'default' = the quickstart/benchmark "
+                         "sizes)")
     ap.add_argument("--workloads", nargs="+", default=None,
                     choices=sorted(MAKERS), metavar="ABBR",
                     help="subset of workload abbreviations")
@@ -99,6 +103,12 @@ def main(argv: list[str] | None = None) -> int:
           f"(paper {agg['hit_rate_err_pct']['paper']:.2f}%), "
           f"runtime err {agg['runtime_err_pct']['ours']:.2f}% "
           f"(paper {agg['runtime_err_pct']['paper']:.2f}%)")
+    binned = summary["aggregates"].get("binned_profile", {})
+    if binned.get("cells"):
+        print(f"binned-profile deviation: max "
+              f"{binned['max_abs_dev']:.2e} over {binned['cells']} "
+              f"level cells (tolerance {binned['tolerance']:.0e}, "
+              f"{'OK' if binned['within_tolerance'] else 'EXCEEDED'})")
     if not args.no_report:
         md = args.report or "docs/validation.md"
         generate_report(out, md)

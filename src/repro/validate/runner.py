@@ -56,6 +56,10 @@ class MatrixSpec:
     strategies: tuple[str, ...] = DEFAULT_STRATEGIES
     sizes: str | None = "validation"   # polybench.SIZE_PRESETS key
     seed: int = 0
+    # also run every cell through a binned=True Session (the fused
+    # device-histogram profile path) and record the absolute deviation
+    # of its SDCM hit rates from the exact-profile prediction
+    binned_check: bool = True
 
     def matrix_id(self) -> str:
         """Stable id of the matrix — namespaces the result shards in
@@ -123,6 +127,19 @@ def run_workload(abbr: str, spec: MatrixSpec,
     )
     predset = session.predict(w, request)
 
+    binned_by_key: dict[tuple, dict] = {}
+    binned_stats = None
+    if spec.binned_check:
+        # separate Session: the binned builder has its own store
+        # fingerprint, so its cells are cached/persisted independently
+        bsession = Session(store=store, binned=True)
+        bpred = bsession.predict(w, request)
+        binned_by_key = {
+            (p.target, p.cores, p.strategy, p.mode): p.hit_rates
+            for p in bpred
+        }
+        binned_stats = dataclasses.asdict(bsession.stats)
+
     records = []
     for cell in predset:
         target = resolve_target(cell.target)
@@ -141,7 +158,7 @@ def run_workload(abbr: str, spec: MatrixSpec,
         t_exact = runtime_model.runtime(
             target, exact, w.op_counts, cell.cores, mode=cell.mode
         )["t_pred_s"]
-        records.append({
+        rec = {
             "workload": abbr,
             "target": cell.target,
             "cores": cell.cores,
@@ -151,14 +168,26 @@ def run_workload(abbr: str, spec: MatrixSpec,
             "t_exact_rates_s": float(t_exact),
             "runtime_rel_err_pct":
                 abs(cell.t_pred_s - t_exact) / max(t_exact, 1e-12) * 100,
-        })
+        }
+        bkey = (cell.target, cell.cores, cell.strategy, cell.mode)
+        if bkey in binned_by_key:
+            brates = binned_by_key[bkey]
+            rec["binned_abs_dev"] = {
+                lvl: abs(float(brates[lvl]) - float(cell.hit_rates[lvl]))
+                for lvl in cell.hit_rates
+            }
+        records.append(rec)
 
+    stats = dataclasses.asdict(session.stats)
+    if binned_stats:  # fold the binned Session's counters in
+        for k, v in binned_stats.items():
+            stats[k] = stats.get(k, 0) + int(v)
     payload = {
         "workload": abbr,
         "trace_id": tid,
         "refs": int(len(trace)),
         "records": records,
-        "session_stats": dataclasses.asdict(session.stats),
+        "session_stats": stats,
         "store_stats": dataclasses.asdict(store.stats) if store else None,
     }
     if store is not None:
@@ -183,6 +212,7 @@ def _merge(shards: list[dict], spec: MatrixSpec) -> dict:
     per_workload: dict[str, dict] = {}
     stats_total: dict[str, int] = {}
     all_hit, all_rt = [], []
+    binned_devs: list[float] = []
 
     for shard in shards:
         w_hit, w_rt = [], []
@@ -194,6 +224,7 @@ def _merge(shards: list[dict], spec: MatrixSpec) -> dict:
                 hit_by_level.setdefault(lvl, []).append(err)
                 all_hit.append(err)
                 w_hit.append(err)
+            binned_devs.extend(rec.get("binned_abs_dev", {}).values())
             rt = rec["runtime_rel_err_pct"]
             rt_by_arch.setdefault(arch, []).append(rt)
             all_rt.append(rt)
@@ -246,6 +277,19 @@ def _merge(shards: list[dict], spec: MatrixSpec) -> dict:
             "per_arch": per_arch,
             "per_level_hit_err_pct": {
                 lvl: float(np.mean(v)) for lvl, v in hit_by_level.items()
+            },
+            # fused device-binned profiles vs exact profiles, same SDCM:
+            # the binned path is usable iff this stays under tolerance
+            "binned_profile": {
+                "cells": len(binned_devs),
+                "max_abs_dev": float(np.max(binned_devs))
+                if binned_devs else 0.0,
+                "mean_abs_dev": float(np.mean(binned_devs))
+                if binned_devs else 0.0,
+                "tolerance": 1e-3,
+                "within_tolerance": bool(
+                    not binned_devs or float(np.max(binned_devs)) <= 1e-3
+                ),
             },
         },
         "per_workload": per_workload,

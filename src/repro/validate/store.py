@@ -43,7 +43,10 @@ import numpy as np
 
 # Bump when the on-disk payload format or the meaning of a key changes:
 # old entries become unreachable (they live under the old version dir).
-STORE_VERSION = 1
+# v2: profile cells carry a ``binned`` meta flag (device-binned log2
+# profiles from the fused kernels/reuse_hist path share the namespace
+# with exact cells, disambiguated by builder fingerprint + this flag).
+STORE_VERSION = 2
 
 _KINDS = ("profile", "exact", "validation")
 
@@ -266,6 +269,7 @@ def save_profile_artifacts(store: ArtifactStore, art,
             "seed": art.seed,
             "line_size": art.line_size,
             "window_size": art.window_size,
+            "binned": bool(getattr(art, "binned", False)),
             "builder": builder,
         },
     )
@@ -303,4 +307,5 @@ def load_profile_artifacts(
         line_size=int(meta["line_size"]), privates=[], shared=None,
         prd=prof("prd"), crd=prof("crd"),
         window_size=meta.get("window_size"),
+        binned=bool(meta.get("binned", False)),
     )

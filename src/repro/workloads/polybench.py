@@ -620,16 +620,36 @@ def all_workloads(subset: list[str] | None = None) -> list[Workload]:
 
 # --- validation size presets ----------------------------------------------
 #
-# The paper traces standard inputs (7-335 GB of references); this
-# container's sequential Fenwick scan makes that infeasible, so the
+# The paper traces standard inputs (7-335 GB of references); the
 # validation harness (repro.validate) runs the full matrix at reduced
 # sizes that keep each trace's loop structure and shared labeling
 # intact.  "validation" targets ~8-12k references per workload (the
 # committed experiments/results/validation_full.json run); "smoke"
-# targets ~1-3k (the CI validation-smoke job).  Default maker sizes
-# (no preset) are the quickstart/benchmark sizes.
+# targets ~1-3k (the CI validation-smoke job).  "validation-xl"
+# targets ~100-200k references per workload — infeasible under the old
+# monolithic Fenwick scan (O(N)-per-step timeline), feasible now that
+# reuse_distances routes large traces through the batched/offline
+# engines and the exact-LRU baselines run per-set batched scans
+# (core/reuse/batched.py).  Default maker sizes (no preset) are the
+# quickstart/benchmark sizes.
 
 SIZE_PRESETS: dict[str, dict[str, dict]] = {
+    "validation-xl": {
+        "adi": dict(n=56, tsteps=2),
+        "atx": dict(n=190),
+        "bcg": dict(n=190),
+        "blk": dict(num_options=5000),
+        "c2d": dict(n=128),
+        "cov": dict(n=54),
+        "dgn": dict(nq=16, nr=16, npp=16),
+        "dbn": dict(n=256),
+        "grm": dict(n=36),
+        "jcb": dict(n=90, tsteps=2),
+        "lu": dict(n=48),
+        "2mm": dict(n=33),
+        "mvt": dict(n=190),
+        "smm": dict(n=44),
+    },
     "validation": {
         "adi": dict(n=20, tsteps=2),
         "atx": dict(n=48),

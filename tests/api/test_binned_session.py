@@ -1,0 +1,87 @@
+"""Session(binned=True): the fused device-binned profile mode through
+the full prediction pipeline — accuracy vs the exact-profile oracle,
+distinct store keys, and cross-process-style store reuse."""
+import numpy as np
+import pytest
+
+from repro.api import PredictionRequest, Session
+from repro.api.stages import MimicProfileBuilder
+from repro.validate.store import DEFAULT_BUILDER_FP, builder_fingerprint
+from repro.workloads.polybench import make_atax
+
+REQ = PredictionRequest(
+    targets=("i7-5960X", "tpu-v5e"),
+    core_counts=(1, 2),
+    respect_core_limit=False,
+)
+
+
+@pytest.fixture(scope="module")
+def workload():
+    return make_atax(n=32)
+
+
+def test_binned_hit_rates_close_to_exact(workload):
+    exact = Session().predict(workload, REQ)
+    binned = Session(binned=True).predict(workload, REQ)
+    assert len(exact) == len(binned)
+    for pe, pb in zip(exact, binned):
+        assert (pe.target, pe.cores) == (pb.target, pb.cores)
+        for lvl, rate in pe.hit_rates.items():
+            assert abs(rate - pb.hit_rates[lvl]) < 1e-3
+
+
+def test_binned_artifacts_flagged(workload):
+    s = Session(binned=True)
+    art = s.artifacts(workload, 2)
+    assert art.binned
+    assert not Session().artifacts(workload, 2).binned
+
+
+def test_binned_streaming_session(workload):
+    """binned + window_size: the fused streaming path end to end."""
+    exact = Session(window_size=512).predict(workload, REQ)
+    binned = Session(window_size=512, binned=True).predict(workload, REQ)
+    for pe, pb in zip(exact, binned):
+        for lvl, rate in pe.hit_rates.items():
+            assert abs(rate - pb.hit_rates[lvl]) < 1e-3
+
+
+def test_builder_fingerprints_distinct():
+    assert builder_fingerprint(MimicProfileBuilder()) == DEFAULT_BUILDER_FP
+    assert (builder_fingerprint(MimicProfileBuilder(binned=True))
+            == DEFAULT_BUILDER_FP + "+binned")
+
+
+def test_binned_param_requires_default_builder():
+    with pytest.raises(ValueError):
+        Session(profile_builder=MimicProfileBuilder(), binned=True)
+    # a binned builder passed explicitly is fine
+    Session(profile_builder=MimicProfileBuilder(binned=True), binned=True)
+
+
+def test_binned_and_exact_cells_coexist_in_store(tmp_path, workload):
+    exact = Session(artifact_dir=tmp_path)
+    exact.predict(workload, REQ)
+    binned = Session(artifact_dir=tmp_path, binned=True)
+    binned.predict(workload, REQ)
+    # distinct keys: the binned session cannot be served exact cells
+    assert binned.stats.store_hits == 0
+    assert binned.stats.profile_builds > 0
+
+    # warm reload in fresh sessions: zero rebuilds on both paths, and
+    # the loaded binned cells keep their flag
+    exact2 = Session(artifact_dir=tmp_path)
+    exact2.predict(workload, REQ)
+    assert exact2.stats.profile_builds == 0
+    binned2 = Session(artifact_dir=tmp_path, binned=True)
+    res = binned2.predict(workload, REQ)
+    assert binned2.stats.profile_builds == 0
+    assert binned2.stats.store_hits > 0
+    art = binned2.artifacts(workload, 2)
+    assert art.binned and art.prd.total > 0
+
+    # served-from-disk binned results identical to freshly built ones
+    fresh = Session(binned=True).predict(workload, REQ)
+    for pf, pd in zip(fresh, res):
+        assert pf.hit_rates == pd.hit_rates

@@ -1,0 +1,171 @@
+"""Batched multi-segment reuse-distance engines vs the monolithic
+oracle (ISSUE-5 tentpole): segment-level bit-identity for both the
+vmapped Fenwick engine and the vectorized offline engine, plus the
+per-set routing satellite."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.reuse import distance as distance_mod
+from repro.core.reuse.batched import (
+    count_leq_before,
+    reuse_distances_batched,
+    reuse_distances_offline,
+)
+from repro.core.reuse.distance import (
+    INF_RD,
+    per_set_reuse_distances,
+    reuse_distances,
+    reuse_distances_ref,
+)
+
+
+# --- offline engine primitives --------------------------------------------
+
+
+@settings(max_examples=60, deadline=None)
+@given(st.lists(st.integers(min_value=-1, max_value=50), min_size=0,
+                max_size=300))
+def test_count_leq_before_matches_bruteforce(values):
+    p = np.asarray(values, dtype=np.int64)
+    got = count_leq_before(p)
+    ref = np.array(
+        [int(np.sum(p[:t] <= p[t])) for t in range(p.size)], dtype=np.int64
+    )
+    assert np.array_equal(got, ref)
+
+
+@settings(max_examples=60, deadline=None)
+@given(st.lists(st.integers(min_value=0, max_value=40), min_size=1,
+                max_size=400))
+def test_offline_matches_stack_oracle(trace):
+    t = np.asarray(trace, dtype=np.int64)
+    assert np.array_equal(reuse_distances_offline(t),
+                          reuse_distances_ref(t))
+
+
+def test_reuse_distances_method_equivalence():
+    rng = np.random.default_rng(0)
+    t = rng.integers(0, 1 << 12, size=5000) * 16
+    a = reuse_distances(t, 64, method="scan")
+    b = reuse_distances(t, 64, method="offline")
+    c = reuse_distances(t, 64, method="auto")
+    assert np.array_equal(a, b) and np.array_equal(a, c)
+    with pytest.raises(ValueError):
+        reuse_distances(t, method="nope")
+
+
+def test_reuse_distances_auto_threshold(monkeypatch):
+    """Above the threshold, auto must route offline (same bits)."""
+    monkeypatch.setattr(distance_mod, "RD_OFFLINE_THRESHOLD", 64)
+    rng = np.random.default_rng(1)
+    t = rng.integers(0, 40, size=500)
+    assert np.array_equal(reuse_distances(t),
+                          reuse_distances(t, method="scan"))
+
+
+# --- batched engines: segment-level bit-identity ---------------------------
+
+
+segments_strategy = st.lists(
+    st.lists(st.integers(min_value=0, max_value=30), min_size=0,
+             max_size=120),
+    min_size=1,
+    max_size=6,
+)
+
+
+@settings(max_examples=20, deadline=None)
+@given(segments_strategy)
+def test_batched_offline_bit_identical_per_segment(segments):
+    segs = [np.asarray(s, dtype=np.int64) for s in segments]
+    got = reuse_distances_batched(segs, engine="offline")
+    for g, s in zip(got, segs):
+        ref = (reuse_distances_ref(s) if s.size
+               else np.empty(0, dtype=np.int64))
+        assert np.array_equal(g, ref)
+
+
+@settings(max_examples=12, deadline=None)
+@given(segments_strategy)
+def test_batched_fenwick_bit_identical_per_segment(segments):
+    # window=32 forces multi-window scans + host compactions on tiny
+    # segments, exercising the windowed carry logic, while keeping the
+    # pow2 bucket set (and therefore XLA compile count) small
+    segs = [np.asarray(s, dtype=np.int64) for s in segments]
+    got = reuse_distances_batched(segs, engine="fenwick", window=32)
+    for g, s in zip(got, segs):
+        ref = (reuse_distances_ref(s) if s.size
+               else np.empty(0, dtype=np.int64))
+        assert np.array_equal(g, ref)
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    st.lists(st.integers(min_value=0, max_value=2000), min_size=1,
+             max_size=500),
+    st.integers(min_value=1, max_value=5),
+)
+def test_random_splits_match_monolithic_oracle(trace, pieces):
+    """A trace split at random points: each piece's batched distances
+    equal the monolithic scan of that piece alone."""
+    t = np.asarray(trace, dtype=np.int64)
+    cuts = np.linspace(0, t.size, pieces + 1).astype(int)
+    segs = [t[a:b] for a, b in zip(cuts[:-1], cuts[1:])]
+    for engine in ("offline", "fenwick"):
+        got = reuse_distances_batched(segs, engine=engine, window=64)
+        for g, s in zip(got, segs):
+            ref = (reuse_distances(s, method="scan") if s.size
+                   else np.empty(0, dtype=np.int64))
+            assert np.array_equal(g, ref)
+
+
+def test_batched_line_size():
+    rng = np.random.default_rng(2)
+    segs = [rng.integers(0, 1 << 14, size=300) * 8 for _ in range(3)]
+    for engine in ("offline", "fenwick"):
+        got = reuse_distances_batched(segs, line_size=64, engine=engine,
+                                      window=64)
+        for g, s in zip(got, segs):
+            assert np.array_equal(g, reuse_distances(s, 64, method="scan"))
+
+
+def test_batched_rejects_unknown_engine():
+    with pytest.raises(ValueError):
+        reuse_distances_batched([np.arange(4)], engine="magic")
+
+
+# --- per-set routing satellite --------------------------------------------
+
+
+@pytest.mark.parametrize("num_sets", [1, 2, 8, 64])
+def test_per_set_batched_equals_monolithic(num_sets):
+    rng = np.random.default_rng(3)
+    t = rng.integers(0, 1 << 16, size=4000)
+    mono = per_set_reuse_distances(t, line_size=64, num_sets=num_sets,
+                                   method="monolithic")
+    bat = per_set_reuse_distances(t, line_size=64, num_sets=num_sets,
+                                  method="batched")
+    assert np.array_equal(mono, bat)
+
+
+def test_per_set_auto_threshold(monkeypatch):
+    """Auto routing must kick in above the threshold and stay exact."""
+    monkeypatch.setattr(distance_mod, "PER_SET_BATCH_THRESHOLD", 256)
+    rng = np.random.default_rng(4)
+    t = rng.integers(0, 1 << 14, size=2000)
+    mono = per_set_reuse_distances(t, line_size=64, num_sets=16,
+                                   method="monolithic")
+    auto = per_set_reuse_distances(t, line_size=64, num_sets=16)
+    assert np.array_equal(mono, auto)
+
+
+def test_per_set_hit_semantics_preserved():
+    """The paper's per-set hit rule on the batched path: distances <
+    associativity are hits, first touches (INF_RD) are not."""
+    rng = np.random.default_rng(5)
+    t = rng.integers(0, 1 << 10, size=1000) * 64
+    rds = per_set_reuse_distances(t, line_size=64, num_sets=4,
+                                  method="batched")
+    assert (rds >= INF_RD).all()
+    assert (rds == INF_RD).sum() == len(np.unique(t // 64))

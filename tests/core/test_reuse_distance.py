@@ -5,6 +5,7 @@ from hypothesis import given, settings, strategies as st
 
 from repro.core.reuse.distance import (
     INF_RD,
+    _IdMap,
     compact_ids,
     per_set_reuse_distances,
     reuse_distances,
@@ -87,3 +88,50 @@ def test_compact_ids_dense():
 
 def test_empty_trace():
     assert reuse_distances(np.empty(0, dtype=np.int64)).size == 0
+
+
+# --- _IdMap: incremental position fix-up (ISSUE-5 satellite) --------------
+
+
+def test_idmap_stable_across_calls():
+    """The same key must map to the same id on every call, including
+    calls that insert new keys before it in sort order."""
+    m = _IdMap()
+    first = m.map(np.array([50, 10, 50, 99], dtype=np.int64))
+    assert first.tolist() == [1, 0, 1, 2]  # ids in sorted-unique order
+    # new keys straddling the known ones force index fix-ups
+    second = m.map(np.array([5, 10, 75, 50, 99, 5], dtype=np.int64))
+    assert second[1] == first[1] and second[3] == first[0]
+    assert second[4] == first[3]
+    assert second[0] == second[5]  # new key, consistent within the call
+    third = m.map(np.array([50, 10, 99, 5, 75], dtype=np.int64))
+    assert third.tolist() == [
+        second[3], second[1], second[4], second[0], second[2],
+    ]
+
+
+@settings(max_examples=40, deadline=None)
+@given(st.lists(
+    st.lists(st.integers(min_value=-(1 << 40), max_value=1 << 40),
+             min_size=1, max_size=30),
+    min_size=1, max_size=6,
+))
+def test_idmap_incremental_matches_fresh_map(batches):
+    """Mapping batch-by-batch must agree with one shot over the concat:
+    ids are assigned in first-appearance order of np.unique batches, so
+    re-mapping the full history in a fresh _IdMap reproduces them."""
+    inc = _IdMap()
+    seen: list[np.ndarray] = []
+    for batch in batches:
+        arr = np.asarray(batch, dtype=np.int64)
+        got = inc.map(arr)
+        seen.append(arr)
+        # every id below the running count, dense, and self-consistent
+        assert got.max(initial=0) < inc.n
+        again = inc.map(arr)
+        assert np.array_equal(got, again)
+    history = np.concatenate(seen)
+    fresh = _IdMap()
+    for arr in seen:
+        fresh.map(arr)
+    assert np.array_equal(inc.map(history), fresh.map(history))

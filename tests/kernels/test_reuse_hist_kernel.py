@@ -1,10 +1,15 @@
-"""Reuse-histogram Pallas kernel vs oracle (interpret)."""
+"""Reuse-histogram Pallas kernels vs oracles (interpret)."""
 import numpy as np
 import pytest
 
 import jax.numpy as jnp
 
-from repro.kernels.reuse_hist import reuse_hist_ref, reuse_histogram
+from repro.kernels.reuse_hist import (
+    reuse_hist_moments_ref,
+    reuse_hist_ref,
+    reuse_histogram,
+    reuse_histogram_moments,
+)
 from repro.kernels.reuse_hist.reuse_hist import NUM_BINS
 
 
@@ -34,3 +39,35 @@ def test_bin_layout():
     got = np.asarray(reuse_histogram(jnp.asarray(d), interpret=True))
     assert got[1] == 2 and got[2] == 2 and got[3] == 2 and got[4] == 1
     assert got.shape == (NUM_BINS,)
+
+
+@pytest.mark.parametrize("n", [1, 5, 1024, 2049])
+def test_moments_matches_ref(n):
+    rng = np.random.default_rng(n)
+    d = rng.integers(-1, 1 << 20, size=n).astype(np.float32)
+    got = np.asarray(
+        reuse_histogram_moments(jnp.asarray(d), interpret=True)
+    )
+    ref = np.asarray(
+        reuse_hist_moments_ref(jnp.asarray(d), jnp.ones((n,), jnp.float32))
+    )
+    assert got.shape == (2, NUM_BINS)
+    np.testing.assert_array_equal(got[0], ref[0])   # counts: exact
+    np.testing.assert_allclose(got[1], ref[1], rtol=1e-6)  # f32 mass
+    assert got[0].sum() == n
+
+
+def test_moments_weighted_and_inf_mass():
+    d = np.array([-1, 0, 1, 2, 1024], dtype=np.float32)
+    w = np.array([2.0, 3.0, 1.0, 1.0, 5.0], dtype=np.float32)
+    got = np.asarray(
+        reuse_histogram_moments(jnp.asarray(d), jnp.asarray(w),
+                                interpret=True)
+    )
+    # row 0 is exactly the plain histogram
+    hist = np.asarray(reuse_histogram(jnp.asarray(d), jnp.asarray(w),
+                                      interpret=True))
+    np.testing.assert_array_equal(got[0], hist)
+    # INF (bin 0) carries no distance mass; finite mass is w * d
+    assert got[1][0] == 0.0
+    assert got[1].sum() == pytest.approx(3 * 0 + 1 * 1 + 1 * 2 + 5 * 1024)

@@ -67,6 +67,28 @@ def test_runner_scores_every_cell(tmp_path):
     assert summary["reference"]["overall"]["runtime_err_pct"] == 9.08
 
 
+def test_binned_profile_deviation_within_tolerance(tmp_path):
+    """ISSUE-5 acceptance: SDCM hit rates from fused device-binned
+    profiles stay within 1e-3 absolute of the exact-profile rates on
+    every scored level cell, and the runner records the comparison."""
+    summary = run_validation(TINY, artifact_dir=tmp_path, processes=1)
+    bp = summary["aggregates"]["binned_profile"]
+    assert bp["cells"] > 0
+    assert bp["max_abs_dev"] <= bp["tolerance"] == 1e-3
+    assert bp["within_tolerance"]
+    for rec in summary["records"]:
+        assert set(rec["binned_abs_dev"]) == set(rec["levels"])
+
+
+def test_binned_check_can_be_disabled(tmp_path):
+    spec = MatrixSpec(workloads=("atx",), core_counts=(1,),
+                      strategies=("round_robin",), sizes="smoke",
+                      binned_check=False)
+    summary = run_validation(spec, artifact_dir=tmp_path, processes=1)
+    assert summary["aggregates"]["binned_profile"]["cells"] == 0
+    assert all("binned_abs_dev" not in r for r in summary["records"])
+
+
 def test_second_run_zero_profile_recomputation(tmp_path):
     """THE acceptance criterion: same artifact_dir, run twice — the
     second run rebuilds no reuse profile and resimulates no baseline."""
