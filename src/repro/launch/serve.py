@@ -65,7 +65,10 @@ def main(argv=None) -> int:
     else:
         caches = fam.init_caches(cfg, batch=args.batch, max_len=max_len)
 
-    prefill = jax.jit(lambda p, b, c: _with(rules, fam.prefill, p, b, cfg, c))
+    prefill = jax.jit(
+        lambda p, b, c: _with(rules, fam.prefill, p, b, cfg, c),
+        donate_argnums=(2,),
+    )
     decode = jax.jit(
         lambda p, b, c, n: _with(rules, fam.decode_step, p, b, cfg, c, n),
         donate_argnums=(2,),

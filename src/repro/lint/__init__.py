@@ -1,0 +1,28 @@
+"""Project-specific static analysis for the repro codebase.
+
+Four analyzer families guard the invariants the test suite cannot see:
+
+* **JP** (jax-purity) — no host syncs, traced control flow, or
+  recompile hazards inside jit-reachable code.
+* **DN** (donation) — carry buffers rebound through jitted calls must
+  be donated; donated buffers must not be read after the call.
+* **CC** (concurrency) — lock-guarded attributes stay under their
+  lock, lock order is consistent, Futures always resolve.
+* **CK** (cache-keys) — fingerprint inputs reach the key,
+  ``STORE_VERSION`` namespaces the key path, save/load meta agree.
+
+Entry points: ``python -m repro.lint`` / the ``repro-lint`` console
+script; programmatic use via :func:`lint_paths`.
+"""
+from repro.lint.engine import Finding, LintResult, ModuleContext, lint_paths
+from repro.lint.rules import RULES, Rule, rules_by_family
+
+__all__ = [
+    "Finding",
+    "LintResult",
+    "ModuleContext",
+    "RULES",
+    "Rule",
+    "lint_paths",
+    "rules_by_family",
+]

@@ -1,0 +1,14 @@
+"""Analyzer registry: each family exposes ``analyze(ctx) -> [Finding]``."""
+from __future__ import annotations
+
+from repro.lint.analyzers import cache_keys, concurrency, donation, jax_purity
+
+ALL_ANALYZERS = (
+    jax_purity.analyze,
+    donation.analyze,
+    concurrency.analyze,
+    cache_keys.analyze,
+)
+
+__all__ = ["ALL_ANALYZERS", "jax_purity", "donation", "concurrency",
+           "cache_keys"]

@@ -132,7 +132,10 @@ class MicroBatcher:
     def start(self) -> None:
         if self._thread is not None:
             return
-        self._stopped = False
+        # flips under the same lock as stop()/offer(): a restart racing
+        # a concurrent offer() must not leave the flag torn
+        with self._state_lock:
+            self._stopped = False
         self._thread = threading.Thread(
             target=self._run, name="repro-service-batcher", daemon=True
         )

@@ -262,6 +262,10 @@ def save_profile_artifacts(store: ArtifactStore, art,
             "crd_distances": np.asarray(art.crd.distances, dtype=np.int64),
             "crd_counts": np.asarray(art.crd.counts, dtype=np.int64),
         },
+        # "builder" is write-only provenance: the artifact key already
+        # encodes the builder fingerprint, so the loader never needs it
+        # back; it exists for humans inspecting the store directory.
+        # repro-lint: disable=CK403 -- builder is write-only provenance
         {
             "trace_id": art.trace_id,
             "cores": art.cores,

@@ -1,0 +1,28 @@
+import textwrap
+
+import pytest
+
+from repro.lint.engine import lint_paths
+
+
+@pytest.fixture
+def lint_source(tmp_path):
+    """Lint a dedented source snippet as a standalone module and return
+    the LintResult."""
+
+    def run(source: str, name: str = "snippet.py"):
+        path = tmp_path / name
+        path.write_text(textwrap.dedent(source))
+        return lint_paths([path], root=tmp_path)
+
+    return run
+
+
+@pytest.fixture
+def rule_ids(lint_source):
+    """Lint a snippet and return just the sorted rule IDs found."""
+
+    def run(source: str, name: str = "snippet.py"):
+        return sorted(f.rule_id for f in lint_source(source, name).findings)
+
+    return run

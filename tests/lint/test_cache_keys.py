@@ -1,0 +1,139 @@
+"""CK family: true positives and false-positive guards."""
+
+
+def test_unused_param_flagged(rule_ids):
+    assert "CK401" in rule_ids("""
+        def artifact_key(tid, seed, line_size):
+            return f"{tid}-s{seed}"
+    """)
+
+
+def test_all_params_interpolated_clean(rule_ids):
+    assert rule_ids("""
+        def artifact_key(tid, seed, line_size):
+            return f"{tid}-s{seed}-l{line_size}"
+    """) == []
+
+
+def test_transitive_flow_through_locals_clean(rule_ids):
+    # params flowing via intermediate assignments and .append() count
+    assert rule_ids("""
+        def bucket_key(n, m, window):
+            parts = [str(n)]
+            parts.append(str(m))
+            w = window or 0
+            parts.append(f"w{w}")
+            return "-".join(parts)
+    """) == []
+
+
+def test_unused_self_attr_flagged(rule_ids):
+    assert "CK401" in rule_ids("""
+        class Builder:
+            @property
+            def store_fingerprint(self):
+                tag = "mimic" if self.binned else "mimic"
+                _ = self.seed
+                return tag
+    """)
+
+
+def test_control_dependent_attr_clean(rule_ids):
+    # a field steering the return via a branch shapes the key too
+    assert rule_ids("""
+        class Buffer:
+            def frontier_key(self, chunk):
+                if self.done:
+                    return float("inf")
+                return (self.start + len(self.addr)) // chunk
+    """) == []
+
+
+def test_non_key_function_not_checked(rule_ids):
+    assert rule_ids("""
+        def transform(a, b):
+            return a
+    """) == []
+
+
+def test_store_version_without_key_path_flagged(rule_ids):
+    assert "CK402" in rule_ids("""
+        STORE_VERSION = 2
+
+        class Store:
+            def _dir(self, kind):
+                return self.root / kind
+    """)
+
+
+def test_store_version_in_key_path_clean(rule_ids):
+    assert rule_ids("""
+        STORE_VERSION = 2
+
+        class Store:
+            def __init__(self, root, version=STORE_VERSION):
+                self.root = root
+                self.version = version
+
+            def _dir(self, kind):
+                return self.root / f"v{self.version}" / kind
+    """) == []
+
+
+def test_meta_field_written_not_read_flagged(rule_ids):
+    assert "CK403" in rule_ids("""
+        def save_cell(store, art):
+            store.put_json("cell", "k", meta={"cores": art.cores,
+                                              "flavor": art.flavor})
+
+        def load_cell(store):
+            meta = store.get_json("cell", "k")
+            return meta["cores"]
+    """)
+
+
+def test_meta_field_read_not_written_flagged(rule_ids):
+    assert "CK403" in rule_ids("""
+        def save_cell(store, art):
+            store.put_json("cell", "k", meta={"cores": art.cores})
+
+        def load_cell(store):
+            meta = store.get_json("cell", "k")
+            return meta["cores"], meta.get("flavor")
+    """)
+
+
+def test_symmetric_meta_clean(rule_ids):
+    assert rule_ids("""
+        def save_cell(store, art):
+            store.put_json("cell", "k", meta={"cores": art.cores,
+                                              "seed": art.seed})
+
+        def load_cell(store):
+            meta = store.get_json("cell", "k")
+            return meta["cores"], meta.get("seed")
+    """) == []
+
+
+def test_arrays_dict_not_mistaken_for_meta(rule_ids):
+    # put_arrays(kind, key, arrays, meta): only the trailing dict is
+    # the persisted meta — payload array names are not meta fields
+    assert rule_ids("""
+        def save_cell(store, art):
+            store.put_arrays(
+                "cell", "k",
+                {"distances": art.distances, "counts": art.counts},
+                {"cores": art.cores},
+            )
+
+        def load_cell(store):
+            arrays, meta = store.get_arrays("cell", "k")
+            return arrays["counts"], meta["cores"]
+    """) == []
+
+
+def test_unpaired_save_not_checked(rule_ids):
+    assert rule_ids("""
+        def save_orphan(store):
+            store.put_json("cell", "k", meta={"cores": 4})
+    """) == []

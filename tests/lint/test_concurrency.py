@@ -1,0 +1,209 @@
+"""CC family: true positives and false-positive guards."""
+
+
+def test_unlocked_write_flagged(rule_ids):
+    # the MicroBatcher.start() bug shape: flag written under the lock in
+    # stop() but bare in start()
+    assert "CC301" in rule_ids("""
+        import threading
+
+        class Batcher:
+            def __init__(self):
+                self._lock = threading.Lock()
+                self._stopped = False
+
+            def start(self):
+                self._stopped = False
+
+            def stop(self):
+                with self._lock:
+                    self._stopped = True
+    """)
+
+
+def test_locked_access_clean(rule_ids):
+    assert rule_ids("""
+        import threading
+
+        class Batcher:
+            def __init__(self):
+                self._lock = threading.Lock()
+                self._stopped = False
+
+            def start(self):
+                with self._lock:
+                    self._stopped = False
+
+            def stop(self):
+                with self._lock:
+                    self._stopped = True
+    """) == []
+
+
+def test_init_writes_exempt(rule_ids):
+    # publication in __init__ happens-before any other thread sees self
+    assert rule_ids("""
+        import threading
+
+        class Stats:
+            def __init__(self):
+                self._lock = threading.Lock()
+                self.count = 0
+
+            def bump(self):
+                with self._lock:
+                    self.count += 1
+    """) == []
+
+
+def test_locked_helper_method_exempt(rule_ids):
+    # `*_locked` helpers are called with the lock already held
+    assert rule_ids("""
+        import threading
+
+        class Store:
+            def __init__(self):
+                self._lock = threading.Lock()
+                self._cache = {}
+
+            def put(self, k, v):
+                with self._lock:
+                    self._cache = {**self._cache, k: v}
+                    self._evict_locked()
+
+            def _evict_locked(self):
+                self._cache = {}
+    """) == []
+
+
+def test_write_through_counter_guarded(rule_ids):
+    # `self.stats.shed += 1` under the lock guards `stats`
+    assert "CC301" in rule_ids("""
+        import threading
+
+        class Service:
+            def __init__(self):
+                self._lock = threading.Lock()
+                self.stats = object()
+
+            def shed(self):
+                with self._lock:
+                    self.stats.shed += 1
+
+            def snapshot(self):
+                return self.stats.shed
+    """)
+
+
+def test_unguarded_attrs_clean(rule_ids):
+    # attributes never written under a lock carry no lock contract
+    assert rule_ids("""
+        import threading
+
+        class Runner:
+            def __init__(self):
+                self._lock = threading.Lock()
+                self._running = False
+
+            def start(self):
+                self._running = True
+
+            def locked_work(self):
+                with self._lock:
+                    pass
+    """) == []
+
+
+def test_lock_order_conflict_flagged(rule_ids):
+    assert "CC302" in rule_ids("""
+        import threading
+
+        class TwoLocks:
+            def __init__(self):
+                self._a = threading.Lock()
+                self._b = threading.Lock()
+
+            def one(self):
+                with self._a:
+                    with self._b:
+                        pass
+
+            def two(self):
+                with self._b:
+                    with self._a:
+                        pass
+    """)
+
+
+def test_consistent_lock_order_clean(rule_ids):
+    assert rule_ids("""
+        import threading
+
+        class TwoLocks:
+            def __init__(self):
+                self._a = threading.Lock()
+                self._b = threading.Lock()
+
+            def one(self):
+                with self._a:
+                    with self._b:
+                        pass
+
+            def two(self):
+                with self._a:
+                    with self._b:
+                        pass
+    """) == []
+
+
+def test_stranded_future_flagged(rule_ids):
+    # resolved on one branch only, then dropped
+    assert "CC303" in rule_ids("""
+        from concurrent.futures import Future
+
+        def submit(ok):
+            fut = Future()
+            if ok:
+                fut.set_result(1)
+            return None
+    """)
+
+
+def test_future_resolved_on_all_branches_clean(rule_ids):
+    assert rule_ids("""
+        from concurrent.futures import Future
+
+        def submit(ok):
+            fut = Future()
+            if ok:
+                fut.set_result(1)
+            else:
+                fut.set_exception(ValueError("no"))
+            return fut.result()
+    """) == []
+
+
+def test_future_returned_clean(rule_ids):
+    # handing the future to the caller discharges responsibility
+    assert rule_ids("""
+        from concurrent.futures import Future
+
+        def submit(queue, item):
+            fut = Future()
+            queue.put((item, fut))
+            return fut
+    """) == []
+
+
+def test_future_resolved_in_except_clean(rule_ids):
+    assert rule_ids("""
+        from concurrent.futures import Future
+
+        def submit(work):
+            fut = Future()
+            try:
+                fut.set_result(work())
+            except Exception as exc:
+                fut.set_exception(exc)
+            return fut
+    """) == []

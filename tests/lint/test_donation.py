@@ -1,0 +1,133 @@
+"""DN family: true positives and false-positive guards."""
+
+
+def test_undonated_carry_flagged(rule_ids):
+    assert "DN201" in rule_ids("""
+        import jax
+
+        @jax.jit
+        def step(tree, xs):
+            return tree + xs, xs
+
+        def drive(tree, batches):
+            for xs in batches:
+                tree, _ = step(tree, xs)
+            return tree
+    """)
+
+
+def test_donated_carry_clean(rule_ids):
+    assert rule_ids("""
+        import functools
+        import jax
+
+        @functools.partial(jax.jit, donate_argnums=(0,))
+        def step(tree, xs):
+            return tree + xs, xs
+
+        def drive(tree, batches):
+            for xs in batches:
+                tree, _ = step(tree, xs)
+            return tree
+    """) == []
+
+
+def test_attribute_carry_flagged(rule_ids):
+    # the fused.py pattern: self._hist is the carry
+    assert "DN201" in rule_ids("""
+        import jax
+
+        @jax.jit
+        def accumulate(hist, xs):
+            return hist + xs
+
+        class Sink:
+            def push(self, xs):
+                self._hist = accumulate(self._hist, xs)
+    """)
+
+
+def test_factory_returned_callable_donation_tracked(rule_ids):
+    # `run = factory(cap)` inherits the nested def's donate_argnums
+    assert rule_ids("""
+        import functools
+        import jax
+
+        def _scan_fn(cap):
+            @functools.partial(jax.jit, donate_argnums=(0,))
+            def run(tree, xs):
+                return tree + xs, xs
+
+            return run
+
+        def drive(tree, xs):
+            run = _scan_fn(8)
+            tree, _ = run(tree, xs)
+            return tree
+    """) == []
+
+
+def test_factory_call_args_not_buffers(rule_ids):
+    # cap/block handed to the *factory* are static config, not donated
+    # buffers — reading them afterwards is fine
+    assert rule_ids("""
+        import functools
+        import jax
+
+        def _scan_fn(cap, block):
+            @functools.partial(jax.jit, donate_argnums=(0, 1))
+            def run(tree, slot, xs):
+                return tree, slot, xs
+
+            return run
+
+        def drive(tree, slot, xs, cap):
+            run = _scan_fn(cap, 64)
+            tree, slot, out = run(tree, slot, xs)
+            return out[:cap]
+    """) == []
+
+
+def test_non_carry_args_clean(rule_ids):
+    # result does not rebind any argument: nothing to donate
+    assert rule_ids("""
+        import jax
+
+        @jax.jit
+        def f(a, b):
+            return a + b
+
+        def drive(a, b):
+            out = f(a, b)
+            return out
+    """) == []
+
+
+def test_use_after_donation_flagged(rule_ids):
+    assert "DN202" in rule_ids("""
+        import functools
+        import jax
+
+        @functools.partial(jax.jit, donate_argnums=(0,))
+        def step(tree, xs):
+            return tree + xs
+
+        def drive(tree, xs):
+            out = step(tree, xs)
+            return tree.sum() + out
+    """)
+
+
+def test_rebind_then_read_clean(rule_ids):
+    assert rule_ids("""
+        import functools
+        import jax
+
+        @functools.partial(jax.jit, donate_argnums=(0,))
+        def step(tree, xs):
+            return tree + xs
+
+        def drive(tree, xs):
+            tree = step(tree, xs)
+            return tree.sum()
+    """) == []

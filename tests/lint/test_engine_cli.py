@@ -1,0 +1,244 @@
+"""Engine plumbing (suppressions, fingerprints, baseline) and the CLI
+exit-code contract."""
+import json
+import textwrap
+
+import pytest
+
+from repro.lint.baseline import apply_baseline, load_baseline, write_baseline
+from repro.lint.cli import main
+from repro.lint.engine import lint_paths
+from repro.lint.rules import RULES, SEVERITIES, rules_by_family
+
+JP_BAD = """
+    import jax
+
+    @jax.jit
+    def f(x):
+        return float(x)
+"""
+
+# one seeded regression per analyzer family (acceptance criterion:
+# introducing any of these must make --check exit non-zero)
+FAMILY_REGRESSIONS = {
+    "JP": JP_BAD,
+    "DN": """
+        import jax
+
+        @jax.jit
+        def step(tree, xs):
+            return tree + xs
+
+        def drive(tree, xs):
+            tree = step(tree, xs)
+            return tree
+    """,
+    "CC": """
+        import threading
+
+        class C:
+            def __init__(self):
+                self._lock = threading.Lock()
+                self._flag = False
+
+            def set(self):
+                with self._lock:
+                    self._flag = True
+
+            def clear(self):
+                self._flag = False
+    """,
+    "CK": """
+        def cell_key(tid, seed):
+            return f"{tid}"
+    """,
+}
+
+
+def _write(tmp_path, source, name="mod.py"):
+    p = tmp_path / name
+    p.write_text(textwrap.dedent(source))
+    return p
+
+
+# -- rule registry -------------------------------------------------------------
+
+def test_registry_shape():
+    assert len(RULES) >= 12
+    for rid, rule in RULES.items():
+        assert rule.id == rid
+        assert rule.severity in SEVERITIES
+        assert rule.summary and rule.fix_hint
+    fams = rules_by_family()
+    assert set(fams) == {"JP", "DN", "CC", "CK"}
+
+
+# -- suppressions --------------------------------------------------------------
+
+def test_same_line_suppression(lint_source):
+    res = lint_source("""
+        import jax
+
+        @jax.jit
+        def f(x):
+            return float(x)  # repro-lint: disable=JP102 -- test fixture
+    """)
+    assert res.findings == []
+    assert res.suppressed == 1
+
+
+def test_comment_above_suppression(lint_source):
+    res = lint_source("""
+        import jax
+
+        @jax.jit
+        def f(x):
+            # repro-lint: disable=JP102 -- sync is intentional here
+            return float(x)
+    """)
+    assert res.findings == []
+    assert res.suppressed == 1
+
+
+def test_family_prefix_suppression(lint_source):
+    res = lint_source("""
+        import jax
+
+        @jax.jit
+        def f(x):
+            return float(x)  # repro-lint: disable=JP
+    """)
+    assert res.findings == []
+
+
+def test_file_wide_suppression(lint_source):
+    res = lint_source("""
+        # repro-lint: disable-file=JP102 -- generated fixture
+        import jax
+
+        @jax.jit
+        def f(x):
+            return float(x)
+
+        @jax.jit
+        def g(x):
+            return float(x)
+    """)
+    assert res.findings == []
+    assert res.suppressed == 2
+
+
+def test_unrelated_suppression_does_not_hide(lint_source):
+    res = lint_source("""
+        import jax
+
+        @jax.jit
+        def f(x):
+            return float(x)  # repro-lint: disable=CK401
+    """)
+    assert [f.rule_id for f in res.findings] == ["JP102"]
+
+
+# -- fingerprints / baseline ---------------------------------------------------
+
+def test_fingerprint_stable_across_line_drift(tmp_path):
+    p = _write(tmp_path, JP_BAD)
+    before = lint_paths([p], root=tmp_path).findings
+    p.write_text("# a new leading comment\n# another\n"
+                 + textwrap.dedent(JP_BAD))
+    after = lint_paths([p], root=tmp_path).findings
+    assert before[0].line != after[0].line
+    assert before[0].fingerprint() == after[0].fingerprint()
+
+
+def test_baseline_round_trip(tmp_path):
+    p = _write(tmp_path, JP_BAD)
+    findings = lint_paths([p], root=tmp_path).findings
+    assert findings
+    bl = tmp_path / "baseline.json"
+    write_baseline(bl, findings)
+    entries = load_baseline(bl)
+    diff = apply_baseline(findings, entries)
+    assert diff.new == [] and len(diff.accepted) == len(findings)
+
+
+def test_baseline_flags_new_and_stale(tmp_path):
+    p = _write(tmp_path, JP_BAD)
+    findings = lint_paths([p], root=tmp_path).findings
+    bl = tmp_path / "baseline.json"
+    write_baseline(bl, findings)
+    p.write_text(textwrap.dedent("""
+        import jax
+
+        @jax.jit
+        def f(x):
+            return int(x)
+    """))
+    fresh = lint_paths([p], root=tmp_path).findings
+    diff = apply_baseline(fresh, load_baseline(bl))
+    assert len(diff.new) == 1          # int(x) is a new line
+    assert len(diff.stale) == 1        # float(x) entry no longer matches
+
+
+def test_bad_baseline_version_rejected(tmp_path):
+    bl = tmp_path / "baseline.json"
+    bl.write_text(json.dumps({"version": 99, "entries": {}}))
+    with pytest.raises(ValueError):
+        load_baseline(bl)
+
+
+# -- CLI contract --------------------------------------------------------------
+
+def test_cli_clean_exits_zero(tmp_path, capsys):
+    _write(tmp_path, "x = 1\n")
+    assert main([str(tmp_path)]) == 0
+    assert "0 finding(s)" in capsys.readouterr().out
+
+
+@pytest.mark.parametrize("family", sorted(FAMILY_REGRESSIONS))
+def test_cli_seeded_regression_fails(tmp_path, family, capsys):
+    _write(tmp_path, FAMILY_REGRESSIONS[family])
+    rc = main(["--check", str(tmp_path)])
+    out = capsys.readouterr().out
+    assert rc == 1
+    assert family in out  # the family's rule ID is reported
+
+
+def test_cli_baseline_check_flow(tmp_path, capsys):
+    _write(tmp_path, JP_BAD)
+    bl = tmp_path / "bl.json"
+    assert main(["--write-baseline", "--baseline", str(bl),
+                 str(tmp_path)]) == 0
+    assert main(["--check", "--baseline", str(bl), str(tmp_path)]) == 0
+    _write(tmp_path, FAMILY_REGRESSIONS["CK"], name="other.py")
+    assert main(["--check", "--baseline", str(bl), str(tmp_path)]) == 1
+    capsys.readouterr()
+
+
+def test_cli_report_only_always_zero(tmp_path, capsys):
+    _write(tmp_path, JP_BAD)
+    assert main(["--report-only", str(tmp_path)]) == 0
+    assert "JP102" in capsys.readouterr().out
+
+
+def test_cli_json_output(tmp_path, capsys):
+    _write(tmp_path, JP_BAD)
+    rc = main(["--json", str(tmp_path)])
+    payload = json.loads(capsys.readouterr().out)
+    assert rc == 1
+    assert payload["files_checked"] == 1
+    assert payload["new_findings"][0]["rule"] == "JP102"
+    assert payload["new_findings"][0]["fix_hint"]
+
+
+def test_cli_parse_error_exits_two(tmp_path, capsys):
+    _write(tmp_path, "def broken(:\n")
+    assert main([str(tmp_path)]) == 2
+    assert "parse error" in capsys.readouterr().err
+
+
+def test_cli_list_rules(capsys):
+    assert main(["--list-rules"]) == 0
+    out = capsys.readouterr().out
+    for rid in RULES:
+        assert rid in out

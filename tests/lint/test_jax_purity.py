@@ -1,0 +1,281 @@
+"""JP family: true positives and false-positive guards."""
+
+
+def test_print_in_jit_flagged(rule_ids):
+    assert "JP101" in rule_ids("""
+        import jax
+
+        @jax.jit
+        def f(x):
+            print("tracing", x)
+            return x + 1
+    """)
+
+
+def test_print_outside_jit_clean(rule_ids):
+    assert rule_ids("""
+        import jax
+
+        def f(x):
+            print(x)
+            return x
+    """) == []
+
+
+def test_jax_debug_print_allowed(rule_ids):
+    assert rule_ids("""
+        import jax
+
+        @jax.jit
+        def f(x):
+            jax.debug.print("x={}", x)
+            return x
+    """) == []
+
+
+def test_float_cast_on_traced_flagged(rule_ids):
+    assert "JP102" in rule_ids("""
+        import jax
+
+        @jax.jit
+        def f(x):
+            return float(x) * 2
+    """)
+
+
+def test_item_on_traced_flagged(rule_ids):
+    assert "JP102" in rule_ids("""
+        import jax
+        import jax.numpy as jnp
+
+        @jax.jit
+        def f(x):
+            total = jnp.sum(x)
+            return total.item()
+    """)
+
+
+def test_int_on_static_arg_clean(rule_ids):
+    # static_argnums values are concrete Python ints under tracing
+    assert rule_ids("""
+        import functools
+        import jax
+
+        @functools.partial(jax.jit, static_argnums=(1,))
+        def f(x, n):
+            return x * int(n)
+    """) == []
+
+
+def test_helper_with_static_callsite_arg_clean(rule_ids):
+    # the _fenwick_levels pattern: a helper reachable from jit code is
+    # only as tainted as its call sites — int() on a shape-derived
+    # argument is not a host sync
+    assert rule_ids("""
+        import jax
+
+        def _levels(n):
+            return max(1, int(n).bit_length())
+
+        @jax.jit
+        def scan(tree):
+            size = tree.shape[0]
+            k = _levels(size)
+            return tree * k
+    """) == []
+
+
+def test_helper_with_traced_callsite_arg_flagged(rule_ids):
+    # same helper, but a caller feeds it traced data
+    assert "JP102" in rule_ids("""
+        import jax
+
+        def _levels(n):
+            return int(n)
+
+        @jax.jit
+        def scan(tree):
+            return tree * _levels(tree[0])
+    """)
+
+
+def test_numpy_on_traced_flagged(rule_ids):
+    assert "JP103" in rule_ids("""
+        import jax
+        import numpy as np
+
+        @jax.jit
+        def f(x):
+            return np.asarray(x).sum()
+    """)
+
+
+def test_numpy_on_host_value_clean(rule_ids):
+    assert rule_ids("""
+        import jax
+        import numpy as np
+
+        @jax.jit
+        def f(x):
+            table = np.arange(16)
+            return x + table
+    """) == []
+
+
+def test_if_on_traced_flagged(rule_ids):
+    assert "JP110" in rule_ids("""
+        import jax
+
+        @jax.jit
+        def f(x):
+            if x > 0:
+                return x
+            return -x
+    """)
+
+
+def test_if_on_config_value_clean(rule_ids):
+    # Python branches on static config are the normal jit idiom
+    assert rule_ids("""
+        import functools
+        import jax
+
+        @functools.partial(jax.jit, static_argnames=("causal",))
+        def f(x, causal):
+            if causal:
+                return x * 2
+            return x
+    """) == []
+
+
+def test_is_none_check_on_traced_clean(rule_ids):
+    # optional-argument plumbing: `w if w is None` is resolved at trace
+    # time regardless of w being traced afterwards
+    assert rule_ids("""
+        import jax
+        import jax.numpy as jnp
+
+        @jax.jit
+        def f(x, w):
+            if w is None:
+                w = jnp.ones_like(x)
+            return x * w
+    """) == []
+
+
+def test_while_on_traced_flagged(rule_ids):
+    assert "JP110" in rule_ids("""
+        import jax
+
+        @jax.jit
+        def f(x):
+            while x > 0:
+                x = x - 1
+            return x
+    """)
+
+
+def test_for_over_shape_range_clean(rule_ids):
+    assert rule_ids("""
+        import jax
+
+        @jax.jit
+        def f(x):
+            for _ in range(x.ndim):
+                x = x.sum(axis=-1)
+            return x
+    """) == []
+
+
+def test_vmapped_helper_params_are_traced(rule_ids):
+    # helpers passed by reference (vmap/scan) receive tracers for every
+    # parameter even without a direct call site
+    assert "JP110" in rule_ids("""
+        import jax
+
+        def row(x):
+            if x > 0:
+                return x
+            return -x
+
+        @jax.jit
+        def f(xs):
+            return jax.vmap(row)(xs)
+    """)
+
+
+def test_jit_wrap_assignment_is_a_root(rule_ids):
+    assert "JP102" in rule_ids("""
+        import jax
+
+        def f(x):
+            return float(x)
+
+        g = jax.jit(f)
+    """)
+
+
+def test_jit_in_loop_flagged(rule_ids):
+    assert "JP120" in rule_ids("""
+        import jax
+
+        def run(fns, x):
+            outs = []
+            for fn in fns:
+                outs.append(jax.jit(fn)(x))
+            return outs
+    """)
+
+
+def test_jit_factory_outside_loop_clean(rule_ids):
+    assert rule_ids("""
+        import functools
+        import jax
+
+        @functools.lru_cache(maxsize=None)
+        def _scan_fn(cap):
+            @functools.partial(jax.jit, donate_argnums=(0,))
+            def run(tree, xs):
+                return tree + xs
+
+            return run
+    """) == []
+
+
+def test_static_arg_from_len_flagged(rule_ids):
+    assert "JP121" in rule_ids("""
+        import functools
+        import jax
+
+        @functools.partial(jax.jit, static_argnums=(1,))
+        def f(x, n):
+            return x[:n]
+
+        def driver(x, xs):
+            return f(x, len(xs))
+    """)
+
+
+def test_static_arg_from_bucketed_constant_clean(rule_ids):
+    assert rule_ids("""
+        import functools
+        import jax
+
+        @functools.partial(jax.jit, static_argnums=(1,))
+        def f(x, n):
+            return x[:n]
+
+        def driver(x):
+            return f(x, 128)
+    """) == []
+
+
+def test_no_jax_import_no_jp(rule_ids):
+    # modules that never import jax are out of the JP family's scope
+    assert rule_ids("""
+        def f(x):
+            print(x)
+            if x > 0:
+                return float(x)
+            return 0.0
+    """) == []

@@ -16,6 +16,10 @@ Three checks:
    importable module under ``src``/the repo root (spec lookup only;
    nothing is executed here — CI smoke-runs the service CLI
    separately).
+4. **Lint rule catalogue** — every rule ID mentioned in
+   ``docs/lint.md`` must exist in ``repro.lint.rules.RULES``, and
+   every registered rule must be documented there (both directions,
+   so the catalogue can never drift from the registry).
 
 Run by the CI ``docs-check`` job and by ``tests/docs/test_docs.py``,
 so documentation drift fails the build instead of accumulating.
@@ -117,6 +121,31 @@ def check_commands(doc: Path, text: str) -> list[str]:
     return problems
 
 
+RULE_ID_RE = re.compile(r"\b(?:JP|DN|CC|CK)\d{3}\b")
+
+
+def check_lint_rules() -> list[str]:
+    """docs/lint.md and repro.lint.rules.RULES must agree exactly."""
+    doc = REPO / "docs" / "lint.md"
+    if not doc.is_file():
+        return ["docs/lint.md: missing (the lint rule catalogue must "
+                "be documented)"]
+    try:
+        from repro.lint.rules import RULES
+    except ImportError as exc:
+        return [f"lint.md: cannot import repro.lint.rules ({exc})"]
+    documented = set(RULE_ID_RE.findall(doc.read_text()))
+    registered = set(RULES)
+    problems = []
+    for rid in sorted(documented - registered):
+        problems.append(f"lint.md: documents rule {rid} which is not "
+                        f"in repro.lint.rules.RULES")
+    for rid in sorted(registered - documented):
+        problems.append(f"lint.md: rule {rid} is registered in "
+                        f"repro.lint.rules but not documented")
+    return problems
+
+
 def run() -> list[str]:
     sys.path.insert(0, str(REPO / "src"))
     sys.path.insert(0, str(REPO))
@@ -125,6 +154,7 @@ def run() -> list[str]:
         problems += check_links(doc, text)
         problems += check_paths(doc, text)
         problems += check_commands(doc, text)
+    problems += check_lint_rules()
     return problems
 
 
