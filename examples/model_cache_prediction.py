@@ -1,0 +1,34 @@
+"""Example — what VMEM hit rate does llama3-8b decode see on the TPU?
+
+The workload registry makes a model step a first-class trace source:
+``model/llama3_8b/decode`` lowers the decode step to optimized HLO
+(plain jit, abstract operands — nothing allocated), extracts the
+granule-labeled memory trace, and the same SDCM pipeline that prices
+the PolyBench suite prices the 128 MB VMEM.  The declared fingerprint
+keys the artifact store, so the second invocation of this script
+performs zero lowerings and zero trace builds.
+
+    PYTHONPATH=src python examples/model_cache_prediction.py
+    PYTHONPATH=src python examples/model_cache_prediction.py  # warm
+"""
+from repro.api import PredictionRequest, Session
+from repro.workloads import registry
+
+session = Session(artifact_dir=".cache/model-artifacts")
+workload = registry.resolve("model/llama3_8b/decode", "smoke",
+                            store=session.store)
+print(f"{workload.workload_name}  "
+      f"(declared fingerprint {workload.declared_fingerprint})")
+
+request = PredictionRequest(
+    targets=("tpu-v5e",),
+    core_counts=(1,),                 # VMEM is shared by all compute units
+    counts=workload.op_counts,        # HLO cost model -> roofline runtime
+)
+result = session.predict(workload, request)
+
+for cell in result.predictions:
+    print(f"  VMEM hit rate @ batch 32: {cell.hit_rates['VMEM']:.4f}   "
+          f"t_pred = {cell.t_pred_s * 1e6:.2f} us/step")
+print(f"  trace builds this run: {session.stats.trace_builds} "
+      f"(store hits: {session.stats.store_hits})")

@@ -102,6 +102,7 @@ class Session:
         binned: bool = False,
         store=None,
         artifact_dir=None,
+        verify_fingerprints: bool = False,
     ):
         if profile_builder is None:
             profile_builder = MimicProfileBuilder(
@@ -122,6 +123,7 @@ class Session:
 
             store = ArtifactStore(artifact_dir)
         self.store = store
+        self.verify_fingerprints = verify_fingerprints
         self.stats = SessionStats()
         self._trace_ids: dict[int, str] = {}       # id(source) -> trace_id
         # pins every cached source: id() keys are only valid while the
@@ -135,26 +137,109 @@ class Session:
 
     # --- artifact construction (each key computed exactly once) -----------
 
-    def load(self, source) -> tuple[str, LabeledTrace]:
-        """Coerce + trace + content-hash a source (cached).
+    def identify(self, source) -> str:
+        """Trace id of a source WITHOUT materializing its trace when a
+        declared fingerprint is available.
 
-        With caching disabled the content hash is skipped (nothing is
-        keyed on it) — the deprecated shim must not pay O(N) hashing
-        the legacy predictor never did.
+        Registry-resolved workloads carry ``declared_fingerprint`` — a
+        stable key over (name, generator version, resolved kwargs) —
+        which becomes the trace id directly, so artifact cells can be
+        answered from the store without ever building the trace.
+        Undeclared sources fall back to :meth:`load` (materialize +
+        content-hash), preserving the old behaviour.
+        """
+        sid = id(source)
+        if self.cache_enabled and sid in self._trace_ids:
+            return self._trace_ids[sid]
+        fp = getattr(source, "declared_fingerprint", None)
+        if fp:
+            tid = str(fp)
+            if self.cache_enabled:
+                self._trace_ids[sid] = tid
+                self._sources[sid] = source
+            return tid
+        tid, _trace = self.load(source)
+        return tid
+
+    def load(self, source) -> tuple[str, LabeledTrace]:
+        """Coerce + trace + id a source (cached).
+
+        Declared sources are keyed by their declared fingerprint;
+        anything else is content-hashed after materialization.  With
+        caching disabled both the id and the hash are skipped (nothing
+        is keyed on them) — the deprecated shim must not pay O(N)
+        hashing the legacy predictor never did.
         """
         sid = id(source)  # the caller's object, not the coercion wrapper
         if self.cache_enabled and sid in self._trace_ids:
             tid = self._trace_ids[sid]
-            return tid, self._traces[tid]
+            return tid, self._trace_of(tid, source)
+        if not self.cache_enabled:
+            trace = as_trace_source(source).trace()
+            self.stats.trace_builds += 1
+            return "", trace
+        fp = getattr(source, "declared_fingerprint", None)
+        if fp:
+            tid = str(fp)
+            self._trace_ids[sid] = tid
+            self._sources[sid] = source
+            return tid, self._trace_of(tid, source)
         trace = as_trace_source(source).trace()
         self.stats.trace_builds += 1
-        if not self.cache_enabled:
-            return "", trace
         tid = trace_content_id(trace)
         self._trace_ids[sid] = tid
         self._sources[sid] = source
         self._traces.setdefault(tid, trace)
         return tid, trace
+
+    def _trace_of(self, tid: str, source) -> LabeledTrace:
+        """Materialize (or fetch) the trace behind an already-known id.
+
+        This is the ONLY place declared sources build their trace, so
+        ``stats.trace_builds`` counts real materializations — the
+        warm-store zero-build property is asserted on it.
+        """
+        if self.cache_enabled and tid in self._traces:
+            return self._traces[tid]
+        trace = as_trace_source(source).trace()
+        self.stats.trace_builds += 1
+        if self.cache_enabled:
+            self._traces[tid] = trace
+        if getattr(source, "declared_fingerprint", None):
+            self._check_declared(tid, source, trace)
+        return trace
+
+    def _check_declared(self, tid: str, source, trace: LabeledTrace) -> None:
+        """Record (and optionally verify) the content hash behind a
+        declared fingerprint.
+
+        First materialization writes ``trace_content_id`` into the
+        store's workload meta; under ``verify_fingerprints=True`` a
+        later materialization that hashes differently — a generator
+        whose declared version lied — raises instead of silently
+        serving stale artifacts.
+        """
+        if self.store is None:
+            return
+        meta = dict(self.store.get_json("workload", tid) or {})
+        recorded = meta.get("trace_content_id")
+        if recorded is None:
+            meta.update(
+                trace_content_id=trace_content_id(trace),
+                refs=len(trace),
+                workload=getattr(source, "workload_name", None)
+                or meta.get("workload"),
+            )
+            self.store.put_json("workload", tid, meta)
+        elif self.verify_fingerprints:
+            cid = trace_content_id(trace)
+            if cid != recorded:
+                raise RuntimeError(
+                    f"declared fingerprint {tid} of "
+                    f"{getattr(source, 'workload_name', source)!r} is stale: "
+                    f"trace content hash {cid} != recorded {recorded} — "
+                    "bump the generator version"
+                )
 
     def _reuse_distances(self, tid: str, trace: LabeledTrace, line: int):
         key = (tid, line)
@@ -218,13 +303,22 @@ class Session:
         models (ExactLRU ground truth).
         """
         ws = self._resolve_window(window_size)
-        tid, trace = self.load(source)
+        if self.cache_enabled:
+            # id only — the trace is materialized lazily, so cells
+            # served from memory/disk never build it (store hits cost
+            # zero trace builds)
+            tid = self.identify(source)
+            trace = None
+        else:
+            tid, trace = self.load(source)
         key = (tid, line_size, cores, strategy, seed, ws)
         if self.cache_enabled and key in self._profiles:
             self.stats.profile_hits += 1
             art = self._profiles[key]
             if need_traces and not art.privates:
-                art = self._materialize_traces(art, trace)
+                art = self._materialize_traces(
+                    art, self._trace_of(tid, source)
+                )
                 self._profiles[key] = art
             return art
         if self.cache_enabled and self.store is not None:
@@ -240,9 +334,13 @@ class Session:
             if art is not None:
                 self.stats.store_hits += 1
                 if need_traces:
-                    art = self._materialize_traces(art, trace)
+                    art = self._materialize_traces(
+                        art, self._trace_of(tid, source)
+                    )
                 self._profiles[key] = art
                 return art
+        if trace is None:
+            trace = self._trace_of(tid, source)
         binned = bool(getattr(self.builder, "binned", False))
         if ws:
             art = self._streaming_artifacts(
@@ -374,7 +472,7 @@ class Session:
         plans = []
         flat: list[tuple[object, ProfileArtifacts]] = []
         for source, request in items:
-            tid, _trace = self.load(source)
+            tid = self.identify(source)
             cells = list(request.cells())
             if not cells:
                 raise ValueError(

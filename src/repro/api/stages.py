@@ -70,7 +70,13 @@ class TraceSource(Protocol):
 
 
 def trace_content_id(trace: LabeledTrace) -> str:
-    """Stable content hash of a trace — the artifact-cache key root."""
+    """Stable content hash of a materialized trace.
+
+    Roots the artifact-cache keys for plain sources; registry-resolved
+    sources carry a *declared fingerprint* instead (computable without
+    the trace — see ``repro.workloads.registry``), and this hash then
+    serves only as the ``verify_fingerprints`` cross-check.
+    """
     h = hashlib.sha1()
     h.update(np.ascontiguousarray(trace.addresses).tobytes())
     h.update(np.ascontiguousarray(trace.bb_ids).tobytes())

@@ -25,14 +25,19 @@ from repro.api import AnalyticalSDCM, Session
 from repro.service.client import ServiceClient
 from repro.service.server import DEFAULT_PORT, PredictionServer, build_request
 from repro.service.service import PredictionService, ServiceConfig
-from repro.workloads.polybench import make_workload
 
 SELFTEST_PAYLOADS = (
-    {"workload": "atx", "sizes": "smoke", "core_counts": [1, 2, 4]},
+    {"workload": "polybench/atx", "sizes": "smoke",
+     "core_counts": [1, 2, 4]},
+    # legacy Table-4 alias spelling: must keep resolving
     {"workload": "mvt", "sizes": "smoke", "core_counts": [1, 8],
      "targets": ["i7-5960X"]},
-    # duplicate of the first: exercises dedup fan-out under load
+    # duplicate of the first VIA its alias: dedup must coalesce the
+    # alias with the canonical spelling
     {"workload": "atx", "sizes": "smoke", "core_counts": [1, 2, 4]},
+    # HLO model-derived workload through the TPU VMEM target
+    {"workload": "model/llama3_8b/decode", "sizes": "smoke",
+     "targets": ["tpu-v5e"], "core_counts": [1]},
 )
 
 
@@ -43,17 +48,6 @@ def selftest(args) -> int:
     )
     service = PredictionService(config=config)
     clients = 6
-
-    # reference: a plain sequential Session with the same cache model —
-    # coalescing must not change a single bit of the results
-    reference = Session(cache_model=AnalyticalSDCM(backend="batched"))
-    expected = []
-    for payload in SELFTEST_PAYLOADS:
-        workload = make_workload(payload["workload"], payload.get("sizes"))
-        request = build_request(payload, workload)
-        result = reference.predict(workload, request)
-        # through the same JSON float round-trip the HTTP path uses
-        expected.append(json.loads(result.to_json())["predictions"])
 
     failures: list[str] = []
 
@@ -72,6 +66,23 @@ def selftest(args) -> int:
 
     with service:
         server = PredictionServer(service, args.host, args.port or 0)
+
+        # reference: a plain sequential Session with the same cache
+        # model — coalescing must not change a single bit of the
+        # results.  Sources come from the server's own resolver so the
+        # reference and the HTTP path share one object per spec (model
+        # workloads lower their HLO at most once per process).
+        reference = Session(cache_model=AnalyticalSDCM(backend="batched"))
+        expected = []
+        for payload in SELFTEST_PAYLOADS:
+            workload = server.resolver.get(
+                payload["workload"], payload.get("sizes")
+            )
+            request = build_request(payload, workload)
+            result = reference.predict(workload, request)
+            # through the same JSON float round-trip the HTTP path uses
+            expected.append(json.loads(result.to_json())["predictions"])
+
         server.serve_background()
         try:
             client = ServiceClient(server.url)
@@ -116,7 +127,8 @@ def serve(args) -> int:
         print(f"prediction service listening on {server.url}")
         print("  try: curl -s -X POST "
               f"{server.url}/predict -d "
-              "'{\"workload\": \"atx\", \"core_counts\": [1, 4, 8]}'")
+              "'{\"workload\": \"polybench/atx\", "
+              "\"core_counts\": [1, 4, 8]}'")
         try:
             server.serve_forever()
         except KeyboardInterrupt:

@@ -7,7 +7,7 @@ batched SDCM kernel exactly like in-process submitters.
 
 Endpoints (JSON in/out):
 
-    POST /predict   {"workload": "atx", "sizes": "smoke",
+    POST /predict   {"workload": "polybench/atx", "sizes": "smoke",
                      "targets": [...], "core_counts": [1, 4, 8],
                      "strategies": ["round_robin"], "runtime": true}
     GET  /stats     service + session + store counters
@@ -15,9 +15,11 @@ Endpoints (JSON in/out):
 
 Error mapping: bad payloads -> 400, queue-full load shed -> 503 (with
 ``Retry-After``), anything else -> 500.  Workloads are resolved by
-Table-4 abbreviation through a cache, so equal (workload, sizes) specs
-share one trace object — and therefore one Session artifact set and
-one dedup key.
+registry name (``polybench/atx``, ``model/llama3_8b/decode``; legacy
+Table-4 abbreviations stay routable as aliases) through a cache, so
+equal (workload, sizes) specs share one source object — and therefore
+one declared fingerprint, one Session artifact set, and one dedup key
+(aliases coalesce with their canonical spelling).
 """
 from __future__ import annotations
 
@@ -29,33 +31,35 @@ from http.server import BaseHTTPRequestHandler, ThreadingHTTPServer
 from repro.api import PredictionRequest
 from repro.hw.targets import ALL_TARGETS, CPU_TARGETS
 from repro.service.service import PredictionService, ServiceOverloadedError
-from repro.workloads.polybench import MAKERS, SIZE_PRESETS, make_workload
 
 DEFAULT_PORT = 8177
 
 
 class WorkloadResolver:
-    """Cached ``make_workload``: one object per (abbr, sizes) spec."""
+    """Cached registry resolution: one source object per canonical
+    (workload, sizes) spec.  ``store`` (the service Session's
+    ArtifactStore) lets model workloads answer ``op_counts`` from
+    persisted metadata instead of re-lowering on every process start.
+    """
 
-    def __init__(self):
+    def __init__(self, store=None):
         self._lock = threading.Lock()
+        self._store = store
         self._cache: dict[tuple[str, str | None], object] = {}
 
-    def get(self, abbr: str, sizes: str | None):
-        if abbr not in MAKERS:
-            raise ValueError(
-                f"unknown workload {abbr!r} (choose from "
-                f"{sorted(MAKERS)})"
-            )
-        if sizes is not None and sizes not in SIZE_PRESETS:
-            raise ValueError(
-                f"unknown size preset {sizes!r} (choose from "
-                f"{sorted(SIZE_PRESETS)} or omit for defaults)"
-            )
-        key = (abbr, sizes)
+    def get(self, name: str, sizes: str | None):
+        from repro.workloads import registry
+
+        try:
+            canonical = registry.canonical_name(name)
+        except KeyError as exc:
+            raise ValueError(exc.args[0] if exc.args else str(exc)) from exc
+        key = (canonical, sizes)
         with self._lock:
             if key not in self._cache:
-                self._cache[key] = make_workload(abbr, sizes)
+                self._cache[key] = registry.resolve(
+                    canonical, sizes, store=self._store
+                )
             return self._cache[key]
 
 
@@ -124,17 +128,20 @@ class _Handler(BaseHTTPRequestHandler):
         try:
             length = int(self.headers.get("Content-Length", 0))
             payload = json.loads(self.rfile.read(length) or b"{}")
-            abbr = payload["workload"]
+            requested = payload["workload"]
             sizes = payload.get("sizes")
             resolver = self.server.resolver  # type: ignore[attr-defined]
-            workload = resolver.get(abbr, sizes)
+            workload = resolver.get(requested, sizes)
+            name = getattr(workload, "workload_name", requested)
             request = build_request(payload, workload)
         except (KeyError, TypeError, ValueError) as exc:
             self._reply(400, {"error": str(exc)})
             return
         try:
+            # dedup on the canonical name so an alias coalesces with
+            # its canonical spelling
             resp = self.service.predict(
-                workload, request, key=(abbr, sizes, request)
+                workload, request, key=(name, sizes, request)
             )
         except ServiceOverloadedError as exc:
             self._reply(503, {"error": str(exc)}, {"Retry-After": "1"})
@@ -146,7 +153,8 @@ class _Handler(BaseHTTPRequestHandler):
             self._reply(500, {"error": f"{type(exc).__name__}: {exc}"})
             return
         self._reply(200, {
-            "workload": abbr,
+            "workload": name,
+            "requested": requested,
             "sizes": sizes,
             "cache_model": resp.result.cache_model,
             "trace_id": resp.result.trace_id,
@@ -164,7 +172,9 @@ class PredictionServer(ThreadingHTTPServer):
                  port: int = DEFAULT_PORT, *, verbose: bool = False):
         super().__init__((host, port), _Handler)
         self.service = service
-        self.resolver = WorkloadResolver()
+        self.resolver = WorkloadResolver(
+            store=getattr(service.session, "store", None)
+        )
         self.verbose = verbose
 
     @property

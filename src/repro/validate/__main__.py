@@ -32,9 +32,17 @@ def main(argv: list[str] | None = None) -> int:
                          "feasible via the batched reuse-distance "
                          "engines; 'default' = the quickstart/benchmark "
                          "sizes)")
-    ap.add_argument("--workloads", nargs="+", default=None,
-                    choices=sorted(MAKERS), metavar="ABBR",
-                    help="subset of workload abbreviations")
+    ap.add_argument("--workloads", nargs="+", default=None, metavar="NAME",
+                    help="subset of registry workload names "
+                         "(polybench/atx, model/llama3_8b/decode, ...); "
+                         "legacy Table-4 abbreviations accepted as "
+                         "aliases")
+    ap.add_argument("--targets", nargs="+", default=None, metavar="TARGET",
+                    help="subset of hardware targets (default: the three "
+                         "Table-5 CPUs; add tpu-v5e for VMEM hit-rate "
+                         "cells)")
+    ap.add_argument("--cores", nargs="+", type=int, default=None,
+                    metavar="N", help="core counts (default: 1 2 4 8)")
     ap.add_argument("--artifact-dir", default=".validation-cache",
                     help="shared disk store (cross-run incrementality + "
                          "the worker-shard channel; default: "
@@ -55,10 +63,26 @@ def main(argv: list[str] | None = None) -> int:
         sizes = None
     if args.artifact_dir and args.artifact_dir.lower() == "none":
         args.artifact_dir = None
-    spec = MatrixSpec(
-        workloads=tuple(args.workloads) if args.workloads else tuple(MAKERS),
-        sizes=sizes,
-    )
+    workloads = tuple(args.workloads) if args.workloads else tuple(MAKERS)
+    # fail fast on typos (and normalize aliases for the matrix id)
+    from repro.workloads import registry
+
+    try:
+        workloads = tuple(registry.canonical_name(w) for w in workloads)
+    except KeyError as exc:
+        ap.error(str(exc.args[0] if exc.args else exc))
+    overrides = {}
+    if args.targets:
+        from repro.hw.targets import ALL_TARGETS
+
+        unknown = [t for t in args.targets if t not in ALL_TARGETS]
+        if unknown:
+            ap.error(f"unknown target(s) {unknown} "
+                     f"(choose from {sorted(ALL_TARGETS)})")
+        overrides["targets"] = tuple(args.targets)
+    if args.cores:
+        overrides["core_counts"] = tuple(args.cores)
+    spec = MatrixSpec(workloads=workloads, sizes=sizes, **overrides)
     print(f"validation matrix: {spec.describe()}")
 
     if args.smoke:

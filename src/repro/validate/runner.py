@@ -35,11 +35,12 @@ from pathlib import Path
 
 import numpy as np
 
-from repro.api import EqRuntimeModel, PredictionRequest, Session
+from repro.api import PredictionRequest, Session
+from repro.api.stages import default_runtime_model
 from repro.hw.targets import CPU_TARGETS, resolve_target
 from repro.validate.reference import paper_claim, reference_record
 from repro.validate.store import ArtifactStore, atomic_write_bytes
-from repro.workloads.polybench import MAKERS, make_workload
+from repro.workloads.polybench import MAKERS
 
 DEFAULT_TARGETS = tuple(CPU_TARGETS)          # the three Table-5 CPUs
 DEFAULT_CORES = (1, 2, 4, 8)
@@ -48,7 +49,13 @@ DEFAULT_STRATEGIES = ("round_robin", "uniform")
 
 @dataclasses.dataclass(frozen=True)
 class MatrixSpec:
-    """Declarative description of one validation matrix."""
+    """Declarative description of one validation matrix.
+
+    ``workloads`` entries are registry names (``polybench/atx``,
+    ``model/llama3_8b/decode``); legacy Table-4 abbreviations keep
+    resolving as aliases, so the default roster stays spelled as the
+    paper abbreviates it.
+    """
 
     workloads: tuple[str, ...] = tuple(MAKERS)
     targets: tuple[str, ...] = DEFAULT_TARGETS
@@ -108,14 +115,23 @@ def _exact_hit_rates(session: Session, store: ArtifactStore | None,
     return rates
 
 
+def _shard_key(spec: MatrixSpec, name: str) -> str:
+    """Store key of one workload's shard; registry names contain
+    ``/`` which must not become directory separators."""
+    return f"{spec.matrix_id()}-{name.replace('/', '_')}"
+
+
 def run_workload(abbr: str, spec: MatrixSpec,
                  artifact_dir: str | os.PathLike | None) -> dict:
     """Score every matrix cell of one workload (one worker's shard)."""
+    from repro.workloads import registry
+
     store = ArtifactStore(artifact_dir) if artifact_dir else None
     session = Session(store=store)
-    runtime_model = EqRuntimeModel()
-    w = make_workload(abbr, spec.sizes)
-    tid, trace = session.load(w)
+    w = registry.resolve(abbr, spec.sizes, store=store)
+    # fingerprint only — the trace is materialized lazily, so a warm
+    # store serves the whole shard with zero trace builds
+    tid = session.identify(w)
 
     request = PredictionRequest(
         targets=spec.targets,
@@ -155,11 +171,13 @@ def run_workload(abbr: str, spec: MatrixSpec,
             }
             for lvl in cell.hit_rates
         }
-        t_exact = runtime_model.runtime(
+        # same per-target model the Session used for t_pred_s (Eq. 4–7
+        # for the instruction-timed CPUs, roofline for the TPU)
+        t_exact = default_runtime_model(target).runtime(
             target, exact, w.op_counts, cell.cores, mode=cell.mode
         )["t_pred_s"]
         rec = {
-            "workload": abbr,
+            "workload": w.workload_name,
             "target": cell.target,
             "cores": cell.cores,
             "strategy": cell.strategy,
@@ -182,17 +200,28 @@ def run_workload(abbr: str, spec: MatrixSpec,
     if binned_stats:  # fold the binned Session's counters in
         for k, v in binned_stats.items():
             stats[k] = stats.get(k, 0) + int(v)
+    # refs come from the store's workload meta when the trace never
+    # materialized this run (warm store); only a store-less run has to
+    # load the trace just to count it
+    refs = None
+    if store is not None:
+        meta = store.get_json("workload", tid)
+        if meta:
+            refs = meta.get("refs")
+    if refs is None:
+        refs = len(session.load(w)[1])
     payload = {
-        "workload": abbr,
+        "workload": w.workload_name,
         "trace_id": tid,
-        "refs": int(len(trace)),
+        "refs": int(refs),
         "records": records,
         "session_stats": stats,
         "store_stats": dataclasses.asdict(store.stats) if store else None,
     }
     if store is not None:
         # store-mediated merge: the parent reads this shard back
-        store.put_json("validation", f"{spec.matrix_id()}-{abbr}", payload)
+        store.put_json("validation", _shard_key(spec, w.workload_name),
+                       payload)
     return payload
 
 
@@ -336,10 +365,14 @@ def run_validation(
         with ctx.Pool(processes) as pool:
             done = pool.map(_worker, jobs)
         # store-mediated merge: read every worker's shard back from disk
+        from repro.workloads import registry
+
         store = ArtifactStore(artifact_dir)
         shards = []
         for abbr in done:
-            shard = store.get_json("validation", f"{spec.matrix_id()}-{abbr}")
+            shard = store.get_json(
+                "validation", _shard_key(spec, registry.canonical_name(abbr))
+            )
             if shard is None:
                 raise RuntimeError(
                     f"worker shard for {abbr!r} missing from the store"

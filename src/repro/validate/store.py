@@ -46,9 +46,13 @@ import numpy as np
 # v2: profile cells carry a ``binned`` meta flag (device-binned log2
 # profiles from the fused kernels/reuse_hist path share the namespace
 # with exact cells, disambiguated by builder fingerprint + this flag).
-STORE_VERSION = 2
+# v3: trace ids of registry-resolved workloads are declared
+# fingerprints (repro.workloads.registry) rather than content hashes,
+# and the ``workload`` kind records per-fingerprint metadata (recorded
+# trace_content_id cross-check, refs, model-trace op counts).
+STORE_VERSION = 3
 
-_KINDS = ("profile", "exact", "validation")
+_KINDS = ("profile", "exact", "validation", "workload")
 
 
 def atomic_write(target: Path, write_fn) -> None:

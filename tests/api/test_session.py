@@ -209,3 +209,38 @@ def test_cache_disabled_recomputes():
     session.artifacts(trace, 2)
     assert session.stats.profile_builds == 2
     assert session.stats.profile_hits == 0
+
+
+def test_store_hit_skips_trace_materialization(tmp_path):
+    """ISSUE-7 satellite: a cell served entirely from disk with a
+    needs_traces=False cache model must not rebuild the trace or the
+    mimicked privates — declared fingerprints key the store without
+    materialization."""
+    from repro.workloads import registry
+
+    w = registry.resolve("polybench/atx", "smoke")
+    request = PredictionRequest(
+        targets=CPU_NAMES, core_counts=(1, 2), counts=COUNTS,
+    )
+    warm = Session(artifact_dir=tmp_path)
+    first = warm.predict(w, request)
+    assert warm.stats.trace_builds == 1
+    assert warm.stats.store_puts > 0
+
+    # fresh process stand-in: new Session, new source object, same store
+    w2 = registry.resolve("polybench/atx", "smoke")
+    cold = Session(artifact_dir=tmp_path)
+    assert not getattr(cold.cache_model, "needs_traces", False)
+    second = cold.predict(w2, request)
+    assert cold.stats.trace_builds == 0, "store hit must not build traces"
+    assert cold.stats.mimic_builds == 0
+    assert cold.stats.interleave_builds == 0
+    assert cold.stats.rd_builds == 0
+    assert cold.stats.profile_builds == 0
+    assert cold.stats.store_hits > 0
+    assert [p.hit_rates for p in second.predictions] == \
+        [p.hit_rates for p in first.predictions]
+    # trace-consuming models still work afterwards (lazy materialization)
+    gt = cold.ground_truth_hit_rates(w2, "i7-5960X", 2)
+    assert cold.stats.trace_builds == 1
+    assert 0.0 <= gt["L1"] <= 1.0

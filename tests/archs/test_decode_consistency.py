@@ -67,7 +67,8 @@ def test_prefill_then_decode_matches_full_prefill(arch_id):
     logits, c2 = jax.jit(
         lambda p, bt, c: fam.prefill(p, bt, cfg, c)
     )(params, prefix_batch, caches())
-    decode = jax.jit(lambda p, bt, c, n: fam.decode_step(p, bt, cfg, c, n))
+    decode = jax.jit(lambda p, bt, c, n: fam.decode_step(p, bt, cfg, c, n),
+                     donate_argnums=(2,))
     length = jnp.asarray(split, jnp.int32)
     for t in range(split, total):
         logits, c2 = decode(params, {"token": jnp.asarray(tokens[:, t:t+1])},

@@ -53,7 +53,7 @@ def test_train_step(arch_id):
         lambda p, b: fam.loss_fn(p, b, cfg), optimizer,
         grad_accum=spec.grad_accum_for(SMOKE_SHAPE),
         accum_dtype=spec.accum_dtype,
-    ))
+    ), donate_argnums=(0,))
     state = init_state(values, optimizer)
     batch = _concrete_batch(spec, SMOKE_SHAPE)
     state, metrics = step_fn(state, batch)
@@ -88,7 +88,8 @@ def test_prefill_then_decode(arch_id):
 
     prompt_len = batch["tokens"].shape[1]
     decode = jax.jit(
-        lambda p, b, c, n: fam.decode_step(p, b, cfg, c, n)
+        lambda p, b, c, n: fam.decode_step(p, b, cfg, c, n),
+        donate_argnums=(2,),
     )
     length = jnp.asarray(prompt_len, jnp.int32)
     tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)[:, None]

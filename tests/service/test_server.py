@@ -39,13 +39,30 @@ def test_predict_over_http(served):
     _service, client = served
     out = client.predict("atx", sizes="smoke", core_counts=[1, 2],
                          targets=["i7-5960X"])
-    assert out["workload"] == "atx"
+    # legacy abbreviation resolves; response carries the canonical name
+    assert out["workload"] == "polybench/atx"
+    assert out["requested"] == "atx"
     assert len(out["predictions"]) == 2
     for cell in out["predictions"]:
         assert cell["target"] == "i7-5960X"
         assert 0.0 <= cell["hit_rates"]["L1"] <= 1.0
         assert cell["t_pred_s"] > 0
     assert out["timing"]["batch_size"] >= 1
+
+
+def test_registry_names_and_aliases_coalesce(served):
+    """The canonical name and its legacy alias resolve to ONE source
+    object, one trace id, and bit-identical predictions."""
+    service, client = served
+    a = client.predict("polybench/atx", sizes="smoke", core_counts=[1, 2],
+                       targets=["i7-5960X"])
+    b = client.predict("atx", sizes="smoke", core_counts=[1, 2],
+                       targets=["i7-5960X"])
+    assert a["workload"] == b["workload"] == "polybench/atx"
+    assert a["trace_id"] == b["trace_id"]
+    assert a["predictions"] == b["predictions"]
+    # second spelling was served from the same Session artifact set
+    assert service.session.stats.trace_builds <= 1
 
 
 def test_concurrent_clients_coalesce(served):
@@ -71,6 +88,20 @@ def test_concurrent_clients_coalesce(served):
     # a few unique computations ever ran
     assert stats["service"]["coalesced"] <= stats["service"]["submitted"]
     assert stats["session"]["profile_builds"] <= 2
+
+
+def test_model_workload_over_http(served):
+    """ISSUE-7 payoff: a model/<arch>/<step> workload returns TPU VMEM
+    hit rates through the same HTTP schema."""
+    _service, client = served
+    out = client.predict("model/llama3_8b/decode", sizes="smoke",
+                         core_counts=[1], targets=["tpu-v5e"])
+    assert out["workload"] == "model/llama3_8b/decode"
+    assert len(out["predictions"]) == 1
+    cell = out["predictions"][0]
+    assert cell["target"] == "tpu-v5e"
+    assert 0.0 <= cell["hit_rates"]["VMEM"] <= 1.0
+    assert cell["t_pred_s"] > 0
 
 
 def test_error_mapping(served):

@@ -143,3 +143,26 @@ def test_no_store_defaults_to_serial():
                       strategies=("round_robin",), sizes="smoke")
     summary = run_validation(spec)           # no artifact_dir, no procs
     assert len(summary["records"]) == 3      # 3 targets x 1 core
+
+
+def test_model_workload_cell_through_matrix(tmp_path):
+    """ISSUE-7 acceptance: a model/<arch>/<step> workload joins the
+    validation grid with a TPU VMEM hit-rate cell, and a second run is
+    served entirely from the store (declared fingerprint stable)."""
+    spec = MatrixSpec(workloads=("model/llama3_8b/decode",),
+                      targets=("tpu-v5e",), core_counts=(1,),
+                      strategies=("round_robin",), sizes="smoke",
+                      binned_check=False)
+    summary = run_validation(spec, artifact_dir=tmp_path, processes=1)
+    assert len(summary["records"]) == 1
+    rec = summary["records"][0]
+    assert rec["workload"] == "model/llama3_8b/decode"
+    assert set(rec["levels"]) == {"VMEM"}
+    assert 0.0 <= rec["levels"]["VMEM"]["predicted"] <= 1.0
+    assert rec["t_pred_s"] > 0          # roofline runtime on the TPU
+    assert summary["per_workload"]["model/llama3_8b/decode"]["refs"] > 0
+
+    second = run_validation(spec, artifact_dir=tmp_path, processes=1)
+    assert second["session_stats"]["trace_builds"] == 0
+    assert second["session_stats"]["profile_builds"] == 0
+    assert second["aggregates"]["overall"] == summary["aggregates"]["overall"]

@@ -1,0 +1,127 @@
+"""Workload registry round-trip: register/resolve/alias/errors, and
+declared-fingerprint stability (ISSUE-7 tentpole surface)."""
+from __future__ import annotations
+
+import types
+
+import pytest
+
+from repro.workloads import registry as R
+from repro.workloads.polybench import MAKERS, SIZE_PRESETS
+from repro.workloads.registry import WorkloadRegistry, WorkloadSpec
+
+
+def _spec(name="test/unit", aliases=(), version="1", presets=("smoke",)):
+    return WorkloadSpec(
+        name=name,
+        build=lambda sizes: types.SimpleNamespace(),
+        size_kwargs=lambda sizes: {"sizes": sizes or "default"},
+        presets=presets,
+        aliases=aliases,
+        version=version,
+    )
+
+
+class TestRegistryRoundTrip:
+    def test_register_resolve(self):
+        reg = WorkloadRegistry()
+        reg.register(_spec(aliases=("tu",)))
+        assert reg.names() == ["test/unit"]
+        assert reg.canonical("test/unit") == "test/unit"
+        assert reg.canonical("tu") == "test/unit"
+        src = reg.resolve("tu", "smoke")
+        assert src.workload_name == "test/unit"
+        assert len(src.declared_fingerprint) == 16
+
+    def test_unnamespaced_name_rejected(self):
+        reg = WorkloadRegistry()
+        with pytest.raises(ValueError, match="namespaced"):
+            reg.register(_spec(name="bare"))
+
+    def test_duplicate_name_and_alias_rejected(self):
+        reg = WorkloadRegistry()
+        reg.register(_spec(aliases=("tu",)))
+        with pytest.raises(ValueError, match="already registered"):
+            reg.register(_spec())
+        with pytest.raises(ValueError, match="already taken"):
+            reg.register(_spec(name="test/other", aliases=("tu",)))
+
+    def test_unknown_name_lists_roster(self):
+        reg = WorkloadRegistry()
+        reg.register(_spec())
+        with pytest.raises(KeyError, match="unknown workload"):
+            reg.canonical("nope")
+
+    def test_unknown_preset_rejected(self):
+        reg = WorkloadRegistry()
+        reg.register(_spec(presets=("smoke",)))
+        with pytest.raises(ValueError, match="unknown size preset"):
+            reg.resolve("test/unit", "enormous")
+        # None (defaults) is always accepted
+        reg.resolve("test/unit", None)
+
+
+class TestDeclaredFingerprints:
+    def test_stable_across_spec_objects(self):
+        a = _spec().fingerprint("smoke")
+        b = _spec().fingerprint("smoke")
+        assert a == b
+
+    def test_sensitive_to_kwargs_and_version(self):
+        base = _spec().fingerprint("smoke")
+        assert _spec().fingerprint(None) != base
+        assert _spec(version="2").fingerprint("smoke") != base
+
+    def test_same_resolved_kwargs_share_fingerprint(self):
+        """Two presets resolving to identical kwargs dedup to one
+        artifact set."""
+        spec = WorkloadSpec(
+            name="test/unit",
+            build=lambda sizes: types.SimpleNamespace(),
+            size_kwargs=lambda sizes: {"n": 8},   # every preset -> same
+            presets=("smoke", "validation"),
+        )
+        assert spec.fingerprint("smoke") == spec.fingerprint("validation")
+
+
+class TestGlobalRegistry:
+    def test_every_maker_registered_with_alias(self):
+        names = R.workload_names("polybench")
+        assert names == sorted(f"polybench/{a}" for a in MAKERS)
+        aliases = R.workload_aliases()
+        for abbr in MAKERS:
+            assert aliases[abbr] == f"polybench/{abbr}"
+
+    def test_model_and_synthetic_namespaces_present(self):
+        assert "model/llama3_8b/decode" in R.workload_names("model")
+        assert R.workload_names("synthetic") == [
+            "synthetic/stream", "synthetic/stride",
+        ]
+
+    def test_resolve_matches_make_workload(self):
+        """Registry resolution is the MAKERS shim: same trace bytes."""
+        import numpy as np
+
+        from repro.workloads.polybench import make_workload
+
+        via_registry = R.resolve("polybench/atx", "smoke").trace()
+        via_makers = make_workload("atx", "smoke").trace()
+        np.testing.assert_array_equal(
+            via_registry.addresses, via_makers.addresses
+        )
+        np.testing.assert_array_equal(
+            via_registry.shared_mask, via_makers.shared_mask
+        )
+
+    def test_polybench_fingerprints_distinct_per_size(self):
+        fps = {
+            R.declared_fingerprint("polybench/atx", s)
+            for s in (None, *SIZE_PRESETS)
+        }
+        assert len(fps) == 1 + len(SIZE_PRESETS)
+
+    def test_synthetic_sources_trace(self):
+        src = R.resolve("synthetic/stride", "smoke")
+        t = src.trace()
+        assert len(t) > 0
+        assert src.op_counts.mem_ops > 0
