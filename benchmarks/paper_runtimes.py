@@ -16,7 +16,12 @@ import time
 import numpy as np
 
 from benchmarks.common import fmt_table, make_session, save_json
-from repro.api import EqRuntimeModel, PredictionRequest
+from repro.api import (
+    EqRuntimeModel,
+    PredictionRequest,
+    resolve_runtime_model,
+    supported_runtime_models,
+)
 from repro.hw.targets import CPU_TARGETS
 from repro.workloads.polybench import all_workloads
 
@@ -44,6 +49,7 @@ def run(quick: bool = True, strategy: str = "round_robin") -> dict:
     session = make_session()
     runtime_model = EqRuntimeModel()
     rows, records, errs = [], [], []
+    model_errs: dict[str, list[float]] = {}
 
     for w in workloads:
         request = PredictionRequest(
@@ -64,6 +70,21 @@ def run(quick: bool = True, strategy: str = "round_robin") -> dict:
             err = (abs(cell.t_pred_s - t_true["t_pred_s"])
                    / max(t_true["t_pred_s"], 1e-12) * 100)
             errs.append(err)
+            # every registered stage-4 model against the same
+            # exact-rates reference (mirrors repro.validate's
+            # runtime-model tier; "eq" reproduces `err` above)
+            cell_models = {}
+            for mname in supported_runtime_models(target):
+                model = resolve_runtime_model(mname, target)
+                t_m = model.runtime(
+                    target, cell.hit_rates, w.op_counts, cell.cores
+                )["t_pred_s"]
+                m_err = (abs(t_m - t_true["t_pred_s"])
+                         / max(t_true["t_pred_s"], 1e-12) * 100)
+                cell_models[mname] = {
+                    "t_pred_s": float(t_m), "rel_err_pct": m_err,
+                }
+                model_errs.setdefault(mname, []).append(m_err)
             records.append({
                 "target": cell.target, "workload": w.abbr,
                 "cores": cell.cores,
@@ -72,6 +93,7 @@ def run(quick: bool = True, strategy: str = "round_robin") -> dict:
                 "t_mem_s": cell.t_mem_s,
                 "t_cpu_s": cell.t_cpu_s,
                 "rel_err_pct": err,
+                "runtime_models": cell_models,
             })
             rows.append([
                 cell.target, w.abbr, cell.cores,
@@ -86,14 +108,20 @@ def run(quick: bool = True, strategy: str = "round_robin") -> dict:
             anchors[w.abbr] = wc
 
     overall = float(np.mean(errs))
+    model_summary = {
+        m: float(np.mean(v)) for m, v in sorted(model_errs.items())
+    }
     print(fmt_table(
         ["target", "app", "cores", "T_pred", "T_exact-rates", "err"], rows))
     print(f"\noverall avg runtime err (SDCM vs exact rates): "
           f"{overall:.2f}%  (paper's HW claim: 9.08%)")
+    print("per-model avg err vs exact-rates reference:",
+          {m: f"{v:.2f}%" for m, v in model_summary.items()})
     print("1-core JAX wall-clock anchors (s):",
           {k: f"{v:.2e}" for k, v in anchors.items()})
     summary = {
         "overall_avg_rel_err_pct": overall,
+        "runtime_model_avg_rel_err_pct": model_summary,
         "paper_claim_pct": 9.08,
         "wallclock_anchors_s": anchors,
         "profile_builds": session.stats.profile_builds,

@@ -333,3 +333,28 @@ class HloCostModel:
 
 def loop_aware_cost(hlo_text: str) -> dict:
     return HloCostModel(hlo_text).entry_cost().as_dict()
+
+
+def op_class_mix(cost: dict, elem_bytes: float = 8.0) -> dict:
+    """Per-class instruction mix from a :func:`loop_aware_cost` dict —
+    the ``OpCounts`` kwargs the in-core runtime models consume.
+
+    HLO has no load/store split or integer-op census, so the mix is a
+    principled approximation over elements moved (``bytes`` /
+    ``elem_bytes``):
+
+    * loads:stores split 2:1 — an elementwise HLO op reads ~two
+      operands per result element and writes one;
+    * one integer op per element moved stands in for the address/index
+      arithmetic the scalar loop nest would carry;
+    * transcendentals map to the slow-op (division/SFU) port.
+    """
+    elems = float(cost["bytes"]) / elem_bytes
+    return {
+        "int_ops": elems,
+        "fp_ops": float(cost["flops"]),
+        "div_ops": float(cost["transcendental"]),
+        "loads": elems * 2.0 / 3.0,
+        "stores": elems / 3.0,
+        "total_bytes": float(cost["bytes"]),
+    }

@@ -40,15 +40,19 @@ from repro.api.stages import (
     AnalyticalSDCM,
     ArrayTraceSource,
     CacheModel,
+    ECMRuntimeModel,
     EqRuntimeModel,
     ExactLRU,
     MimicProfileBuilder,
     ProfileArtifacts,
     ProfileBuilder,
+    RUNTIME_MODELS,
     RooflineRuntimeModel,
     RuntimeModel,
     Target,
     TraceSource,
+    resolve_runtime_model,
+    supported_runtime_models,
     trace_content_id,
 )
 
@@ -58,6 +62,7 @@ __all__ = [
     "CacheModel",
     "ChunkedTraceSource",
     "CellPrediction",
+    "ECMRuntimeModel",
     "EqRuntimeModel",
     "ExactLRU",
     "GridCell",
@@ -66,11 +71,14 @@ __all__ = [
     "PredictionSet",
     "ProfileArtifacts",
     "ProfileBuilder",
+    "RUNTIME_MODELS",
     "RooflineRuntimeModel",
     "RuntimeModel",
     "Session",
     "SessionStats",
     "Target",
     "TraceSource",
+    "resolve_runtime_model",
+    "supported_runtime_models",
     "trace_content_id",
 ]

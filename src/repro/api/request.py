@@ -43,6 +43,9 @@ class PredictionRequest:
     strategies: tuple[str, ...] = ("round_robin",)
     modes: tuple[str, ...] = ("throughput",)
     counts: OpCounts | None = None
+    # stage-4 model by registry name ("eq" / "ecm" / "roofline");
+    # None/"auto" keeps each target's default (repro.api.stages)
+    runtime_model: str | None = None
     seed: int = 0
     gap_bytes: float = 0.0
     keep_profiles: bool = False
@@ -66,6 +69,13 @@ class PredictionRequest:
             raise ValueError("core counts must be >= 1")
         if self.window_size is not None and self.window_size < 0:
             raise ValueError("window_size must be >= 0 (0 = in-memory)")
+        if self.runtime_model is not None:
+            # validate both the name and every target pairing up front —
+            # a bad request fails at build time, not mid-grid
+            from repro.api.stages import resolve_runtime_model
+
+            for target in self.targets:
+                resolve_runtime_model(self.runtime_model, target)
 
     def resolved_targets(self) -> list:
         return [resolve_target(t) for t in self.targets]

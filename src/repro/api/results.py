@@ -21,6 +21,8 @@ class CellPrediction:
     t_pred_s: float | None = None
     t_mem_s: float | None = None
     t_cpu_s: float | None = None
+    # which stage-4 model produced the runtime fields ("eq"/"ecm"/...)
+    runtime_model: str | None = None
     private_profile: ReuseProfile | None = None
     shared_profile: ReuseProfile | None = None
 
@@ -37,6 +39,7 @@ class CellPrediction:
                 t_pred_s=self.t_pred_s,
                 t_mem_s=self.t_mem_s,
                 t_cpu_s=self.t_cpu_s,
+                runtime_model=self.runtime_model,
             )
         return rec
 

@@ -43,6 +43,7 @@ from repro.api.stages import (
     ProfileArtifacts,
     as_trace_source,
     default_runtime_model,
+    resolve_runtime_model,
     trace_content_id,
 )
 from repro.core.reuse.profile import profile_from_distances
@@ -513,8 +514,18 @@ class Session:
         predictions = []
         for cell, art, rates in zip(cells, arts, rate_dicts):
             timing = {}
+            rt = None
             if request.counts is not None:
-                rt = self.runtime_model or default_runtime_model(cell.target)
+                # precedence: per-request named model > the Session's
+                # injected stage > the target's default
+                if request.runtime_model is not None:
+                    rt = resolve_runtime_model(
+                        request.runtime_model, cell.target
+                    )
+                else:
+                    rt = self.runtime_model or default_runtime_model(
+                        cell.target
+                    )
                 timing = rt.runtime(
                     cell.target, rates, request.counts, cell.cores,
                     mode=cell.mode, gap_bytes=request.gap_bytes,
@@ -529,6 +540,7 @@ class Session:
                     t_pred_s=timing.get("t_pred_s"),
                     t_mem_s=timing.get("t_mem_s"),
                     t_cpu_s=timing.get("t_cpu_s"),
+                    runtime_model=getattr(rt, "name", None) if rt else None,
                     private_profile=art.prd if request.keep_profiles else None,
                     shared_profile=art.crd if request.keep_profiles else None,
                 )

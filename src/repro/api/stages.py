@@ -34,7 +34,9 @@ from repro.core.reuse.profile import (
     profile_from_distances,
     profile_from_distances_incremental,
 )
+from repro.core.incore import ECMRuntimeModel, miss_fractions
 from repro.core.runtime_model import OpCounts, predict_runtime_s
+from repro.hw.targets import resolve_target
 from repro.core.trace.interleave import interleave_traces, interleave_windows
 from repro.core.trace.mimic import gen_private_traces
 from repro.core.trace.types import LabeledTrace
@@ -393,6 +395,8 @@ class RuntimeModel(Protocol):
 class EqRuntimeModel:
     """Paper Eq. 4–7 (T_mem latency/throughput chain + two-mode T_CPU)."""
 
+    name = "eq"
+
     def runtime(self, target, hit_rates, counts, cores, *,
                 mode="throughput", gap_bytes=0.0):
         ordered = [hit_rates[l.name] for l in target.levels]
@@ -401,24 +405,60 @@ class EqRuntimeModel:
         )
 
 
+def roofline_peak_flops(target) -> float:
+    """Peak FLOP rate: the accelerator's declared peak, else the CPU's
+    fully-issued FP pipes (freq / aggregate β_fp)."""
+    peak = getattr(target, "peak_flops_bf16", None)
+    if peak is not None:
+        return peak
+    return target.freq_hz / target.instr.beta_fp
+
+
+def roofline_mem_bandwidth(target) -> float:
+    """Sustained memory bandwidth (bytes/s): the accelerator's HBM
+    figure, else the word-per-β_RAM stream of the Eq. 7 chain."""
+    bw = getattr(target, "hbm_bandwidth", None)
+    if bw is not None:
+        return bw
+    return target.word_bytes / (target.ram_beta_cy * target.cycle_s)
+
+
+def roofline_miss_latency_s(target) -> float:
+    """One un-hidden round trip to backing memory: the accelerator's
+    declared on-chip latency, else the RAM latency of the Eq. 6 chain."""
+    lat = getattr(target, "vmem_latency_s", None)
+    if lat is not None:
+        return lat
+    return target.ram_latency_cy * target.cycle_s
+
+
 class RooflineRuntimeModel:
-    """Accelerator stage 4: VMEM hits are ~free, misses stream from HBM
-    at ``hbm_bandwidth``; compute at ``peak_flops_bf16``.  ``mode``
-    picks the combiner: throughput-bound overlap (max) vs a serialized
-    latency chain (sum)."""
+    """Bandwidth/peak-FLOPs stage 4: on-chip hits are ~free, the
+    traffic missing every cache level streams from backing memory at
+    the target's sustained bandwidth; compute at the peak FLOP rate.
+    ``mode`` picks the combiner: throughput-bound overlap (max) vs a
+    serialized latency chain (sum).
+
+    The accelerator reading (VMEM + HBM on the TPU) is unchanged; CPU
+    and GPU targets reuse the same two-term model with peaks derived
+    from their Eq. 4–7 parameters, which is what makes it the crude
+    baseline the ECM model is gated against (``--runtime-gate``).
+    """
+
+    name = "roofline"
 
     def runtime(self, target, hit_rates, counts, cores, *,
                 mode="throughput", gap_bytes=0.0):
         share = counts.scaled(1.0 / max(cores, 1))
-        # the on-chip level is levels[0] by name, never dict order; a
-        # missing key is a model-wiring bug — fail loudly like the Eq.
-        # 4-7 model does, don't degrade to an all-miss estimate
-        vmem_rate = hit_rates[target.levels[0].name]
-        miss_bytes = (1.0 - vmem_rate) * share.total_bytes
-        t_mem = miss_bytes / target.hbm_bandwidth
-        if miss_bytes > 0.0:  # no misses -> no HBM round-trip to hide
-            t_mem += target.vmem_latency_s
-        t_cpu = share.fp_ops / target.peak_flops_bf16
+        # levels are read by name, never dict order; a missing key is a
+        # model-wiring bug — fail loudly like the Eq. 4-7 model does,
+        # don't degrade to an all-miss estimate
+        ordered = [hit_rates[lvl.name] for lvl in target.levels]
+        miss_bytes = miss_fractions(ordered)[-1] * share.total_bytes
+        t_mem = miss_bytes / roofline_mem_bandwidth(target)
+        if miss_bytes > 0.0:  # no misses -> no memory round-trip to hide
+            t_mem += roofline_miss_latency_s(target)
+        t_cpu = share.fp_ops / roofline_peak_flops(target)
         t_pred = max(t_mem, t_cpu) if mode == "throughput" else t_mem + t_cpu
         return {"t_pred_s": t_pred, "t_mem_s": t_mem, "t_cpu_s": t_cpu}
 
@@ -429,3 +469,63 @@ def default_runtime_model(target) -> RuntimeModel:
     if hasattr(target, "instr"):
         return EqRuntimeModel()
     return RooflineRuntimeModel()
+
+
+#: Stage-4 registry: every runtime model addressable by name through
+#: ``PredictionRequest(runtime_model=...)`` and the service's
+#: ``/predict`` payload.  "auto" keeps the per-target default.
+RUNTIME_MODELS: dict[str, type] = {
+    "eq": EqRuntimeModel,
+    "roofline": RooflineRuntimeModel,
+    "ecm": ECMRuntimeModel,
+}
+
+RUNTIME_MODEL_NAMES = ("auto",) + tuple(RUNTIME_MODELS)
+
+
+def supported_runtime_models(target) -> tuple[str, ...]:
+    """Which named stage-4 models can run on ``target``.
+
+    * ``eq`` needs the aggregate Eq. 4–7 ``instr`` timings;
+    * ``ecm`` needs per-class ``incore`` tables (or ``instr`` to derive
+      a 1-port fallback table) plus the per-level β chain;
+    * ``roofline`` runs everywhere — peaks are declared (TPU) or
+      derived from the Eq. 4–7 parameters (CPUs/GPU).
+    """
+    target = resolve_target(target)
+    names = []
+    if hasattr(target, "instr"):
+        names.append("eq")
+    if getattr(target, "incore", None) is not None or hasattr(target, "instr"):
+        names.append("ecm")
+    names.append("roofline")
+    return tuple(names)
+
+
+def resolve_runtime_model(name, target=None) -> RuntimeModel:
+    """Instantiate a stage-4 model by registry name.
+
+    ``None``/``"auto"`` defer to :func:`default_runtime_model` (which
+    needs ``target``).  A named model is validated against the target's
+    capabilities so an unsupported pairing fails at request-build time,
+    not deep inside a grid evaluation.
+    """
+    if name is None or name == "auto":
+        if target is None:
+            raise ValueError("runtime model 'auto' needs a target")
+        return default_runtime_model(resolve_target(target))
+    try:
+        cls = RUNTIME_MODELS[name]
+    except KeyError:
+        raise ValueError(
+            f"unknown runtime model {name!r}; known: "
+            f"{sorted(RUNTIME_MODEL_NAMES)}"
+        ) from None
+    if target is not None:
+        target = resolve_target(target)
+        if name not in supported_runtime_models(target):
+            raise ValueError(
+                f"target {target.name!r} does not support runtime model "
+                f"{name!r} (supported: {supported_runtime_models(target)})"
+            )
+    return cls()

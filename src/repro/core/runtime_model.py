@@ -46,7 +46,18 @@ class OpCounts:
 
 def level_chain(values: list[float], hit_rates: list[float], final: float) -> float:
     """The Eq. 6/7 chain:  Σ over levels of P_i·v_i weighted by upstream
-    misses, terminating in the RAM/final term."""
+    misses, terminating in the RAM/final term.
+
+    ``values`` and ``hit_rates`` must be per-level parallel lists: a
+    2-level rate list against a 3-level cost list would silently drop
+    the deepest level under ``zip`` truncation, so a length mismatch is
+    an error, not a shorter chain.
+    """
+    if len(values) != len(hit_rates):
+        raise ValueError(
+            f"level_chain needs one hit rate per level: got "
+            f"{len(hit_rates)} rates for {len(values)} levels"
+        )
     acc = final
     for p, v in zip(reversed(hit_rates), reversed(values)):
         acc = p * v + (1.0 - p) * acc

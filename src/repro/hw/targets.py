@@ -7,11 +7,22 @@
 * TPU v5e-class chip (the adaptation target): peak bf16 FLOP/s, HBM
   bandwidth, ICI link bandwidth per the project brief, VMEM treated as a
   software-managed last-level "cache" for the reuse-profile model.
+* A GPU-like SM target (``gpu-sm``): wide-throughput / high-latency
+  per-class port tables with an HBM memory chain, addressed through
+  the same CPUTarget interface so the whole pipeline (SDCM, exact LRU,
+  every runtime model, ``repro.validate --targets gpu-sm``) treats it
+  as just another hierarchy.
+
+CPU targets additionally carry OSACA-style per-class ``incore`` port
+tables (``repro.core.incore.InCoreTimings``) feeding the ECM runtime
+model; ``docs/runtime.md`` documents every table and
+``tools/docs_check.py`` asserts docs and code agree both directions.
 """
 from __future__ import annotations
 
 from dataclasses import dataclass, field
 
+from repro.core.incore import ClassTiming, InCoreTimings
 from repro.core.levels import CacheLevelConfig
 
 
@@ -44,6 +55,11 @@ class CPUTarget:
     instr: InstrTimings
     shared_level: int = -1  # index of the level shared across cores (LLC)
     word_bytes: int = 8
+    # OSACA-style per-class port table for the ECM in-core model
+    # (repro.core.incore); None falls back to a 1-port table derived
+    # from ``instr``.  Aggregate βs stay consistent by construction:
+    # instr.beta_X == incore.X.beta / incore.X.ports.
+    incore: InCoreTimings | None = None
 
     @property
     def cycle_s(self) -> float:
@@ -67,6 +83,15 @@ HASWELL_I7_5960X = CPUTarget(
     ram_latency_cy=240.0,
     ram_beta_cy=14.0,
     instr=InstrTimings(1.0, 0.25, 3.0, 0.5, 20.0, 8.0),
+    # Haswell port model: 4 ALU ports (p0156), 2 FMA pipes (p01), one
+    # radix div unit (p0), 2 load AGUs (p23), 1 store-data port (p4)
+    incore=InCoreTimings(
+        int_ops=ClassTiming(1.0, 1.0, 4),
+        fp_ops=ClassTiming(3.0, 1.0, 2),
+        div_ops=ClassTiming(20.0, 8.0, 1),
+        loads=ClassTiming(4.0, 1.0, 2),
+        stores=ClassTiming(4.0, 1.0, 1),
+    ),
 )
 
 BROADWELL_E5_2699V4 = CPUTarget(
@@ -84,6 +109,14 @@ BROADWELL_E5_2699V4 = CPUTarget(
     ram_latency_cy=200.0,
     ram_beta_cy=12.0,
     instr=InstrTimings(1.0, 0.25, 3.0, 0.5, 23.0, 10.0),
+    # Broadwell keeps Haswell's port layout; the div unit is slower
+    incore=InCoreTimings(
+        int_ops=ClassTiming(1.0, 1.0, 4),
+        fp_ops=ClassTiming(3.0, 1.0, 2),
+        div_ops=ClassTiming(23.0, 10.0, 1),
+        loads=ClassTiming(4.0, 1.0, 2),
+        stores=ClassTiming(4.0, 1.0, 1),
+    ),
 )
 
 ZEN2_EPYC_7702P = CPUTarget(
@@ -103,12 +136,59 @@ ZEN2_EPYC_7702P = CPUTarget(
     ram_latency_cy=230.0,
     ram_beta_cy=13.0,
     instr=InstrTimings(1.0, 0.25, 3.0, 0.5, 13.0, 5.0),
+    # Zen2: 4 ALUs, 2 FMA pipes (FP0/FP1), fast radix-4 divider,
+    # 2 load + 1 store AGU ops per cycle
+    incore=InCoreTimings(
+        int_ops=ClassTiming(1.0, 1.0, 4),
+        fp_ops=ClassTiming(3.0, 1.0, 2),
+        div_ops=ClassTiming(13.0, 5.0, 1),
+        loads=ClassTiming(4.0, 1.0, 2),
+        stores=ClassTiming(4.0, 1.0, 1),
+    ),
 )
 
 CPU_TARGETS = {
     t.name: t
     for t in (HASWELL_I7_5960X, BROADWELL_E5_2699V4, ZEN2_EPYC_7702P)
 }
+
+
+# --- GPU-like SM target (ECM adaptation; PPT-GPU-style abstraction) ---------
+#
+# One streaming multiprocessor modeled through the SAME CPUTarget
+# interface: "cores" are SMs, the per-SM L1/shared-memory level is
+# private, the chip L2 is the shared level, and the RAM terms model the
+# HBM chain.  The in-core table is the GPU signature the ISSUE asks
+# for: very WIDE throughput (32-lane port groups, β_eff « 1 cy/op) at
+# HIGH dependent-issue latency (δ_int/fp ≈ 4–8 cy, SFU ≈ 16 cy) — the
+# opposite corner of the (δ, β) plane from the CPUs, which is exactly
+# what makes it a useful stress target for the ECM vs Eq. 4–7 split.
+
+GPU_SM90_LIKE = CPUTarget(
+    name="gpu-sm",
+    microarch="sm90-like",
+    cores=108,                       # SMs ("cores" in a grid request)
+    freq_hz=1.4e9,
+    levels=(
+        # per-SM L1/shared-memory carveout; chip-wide L2
+        CacheLevelConfig("L1", 128 * 1024, 128, 64),
+        CacheLevelConfig("L2", 40 * 1024 * 1024, 128, 16),
+    ),
+    level_latency_cy=(28.0, 200.0),
+    level_beta_cy=(0.25, 2.0),
+    ram_latency_cy=480.0,            # HBM round trip
+    ram_beta_cy=4.0,                 # HBM chain: wide but contended
+    instr=InstrTimings(4.0, 0.03125, 4.0, 0.03125, 16.0, 0.0625),
+    shared_level=1,
+    word_bytes=4,
+    incore=InCoreTimings(
+        int_ops=ClassTiming(4.0, 1.0, 32),
+        fp_ops=ClassTiming(4.0, 1.0, 32),
+        div_ops=ClassTiming(16.0, 1.0, 16),   # SFU quad-pumped lanes
+        loads=ClassTiming(28.0, 1.0, 4),      # LSU: 4 accesses/cy/SM
+        stores=ClassTiming(28.0, 1.0, 4),
+    ),
+)
 
 
 # --- TPU target (adaptation; constants from the project brief) --------------
@@ -158,6 +238,7 @@ TPU_V5E = TPUTarget()
 # Unified registry: every target the prediction API can address by name.
 ALL_TARGETS: dict[str, CPUTarget | TPUTarget] = {
     **CPU_TARGETS,
+    GPU_SM90_LIKE.name: GPU_SM90_LIKE,
     TPU_V5E.name: TPU_V5E,
 }
 

@@ -9,7 +9,8 @@ Endpoints (JSON in/out):
 
     POST /predict   {"workload": "polybench/atx", "sizes": "smoke",
                      "targets": [...], "core_counts": [1, 4, 8],
-                     "strategies": ["round_robin"], "runtime": true}
+                     "strategies": ["round_robin"], "runtime": true,
+                     "runtime_model": "auto" | "eq" | "ecm" | "roofline"}
     GET  /stats     service + session + store counters
     GET  /healthz   liveness
 
@@ -82,6 +83,9 @@ def build_request(payload: dict, workload) -> PredictionRequest:
         strategies=tuple(payload.get("strategies") or ("round_robin",)),
         modes=tuple(payload.get("modes") or ("throughput",)),
         counts=workload.op_counts if payload.get("runtime", True) else None,
+        # PredictionRequest validates the name against every requested
+        # target, so a bad model/target pairing is a 400 here too
+        runtime_model=payload.get("runtime_model"),
         seed=int(payload.get("seed", 0)),
         window_size=int(window) if window is not None else None,
     )

@@ -20,6 +20,29 @@ from repro.validate.runner import MatrixSpec, run_validation, save_results
 from repro.workloads.polybench import MAKERS
 
 
+def check_runtime_gate(aggregates: dict) -> tuple[bool, str]:
+    """The --runtime-gate criterion: the instruction-aware ECM model
+    must predict runtime at least as accurately as the crude roofline
+    baseline, aggregated over every scored cell.
+
+    Returns ``(passed, message)``; missing per-model aggregates (a
+    matrix that scored neither model) fail loudly rather than passing
+    vacuously.
+    """
+    models = aggregates.get("runtime_models", {})
+    ecm = models.get("ecm")
+    roofline = models.get("roofline")
+    if not ecm or not roofline:
+        return False, ("runtime gate: matrix did not score both 'ecm' and "
+                       f"'roofline' (scored: {sorted(models)})")
+    e, r = ecm["overall_rel_err_pct"], roofline["overall_rel_err_pct"]
+    msg = (f"runtime gate: ecm {e:.3f}% vs roofline {r:.3f}% aggregate "
+           f"relative error over {ecm['cells']} cells")
+    if e <= r + 1e-9:
+        return True, f"OK: {msg}"
+    return False, f"FAIL: {msg} — ECM must not be worse than roofline"
+
+
 def main(argv: list[str] | None = None) -> int:
     ap = argparse.ArgumentParser(prog="repro.validate")
     ap.add_argument("--smoke", action="store_true",
@@ -56,6 +79,9 @@ def main(argv: list[str] | None = None) -> int:
                     help="markdown report path (default: docs/validation.md "
                          "for full runs; omitted for --smoke)")
     ap.add_argument("--no-report", action="store_true")
+    ap.add_argument("--runtime-gate", action="store_true",
+                    help="fail unless the ECM model's aggregate runtime "
+                         "error is <= the roofline baseline's")
     args = ap.parse_args(argv)
 
     sizes = args.sizes or ("smoke" if args.smoke else "validation")
@@ -115,6 +141,11 @@ def main(argv: list[str] | None = None) -> int:
             return 1
         print("OK: second run performed zero reuse-profile recomputations "
               f"({s2.get('store_hits', 0)} disk-store hits)")
+        if args.runtime_gate:
+            passed, msg = check_runtime_gate(second["aggregates"])
+            print(msg, file=None if passed else sys.stderr)
+            if not passed:
+                return 1
         return 0
 
     summary = run_validation(spec, artifact_dir=args.artifact_dir,
@@ -133,10 +164,19 @@ def main(argv: list[str] | None = None) -> int:
               f"{binned['max_abs_dev']:.2e} over {binned['cells']} "
               f"level cells (tolerance {binned['tolerance']:.0e}, "
               f"{'OK' if binned['within_tolerance'] else 'EXCEEDED'})")
+    models = summary["aggregates"].get("runtime_models", {})
+    for mname, entry in models.items():
+        print(f"runtime model {mname}: {entry['overall_rel_err_pct']:.2f}% "
+              f"aggregate error over {entry['cells']} cells")
     if not args.no_report:
         md = args.report or "docs/validation.md"
         generate_report(out, md)
         print(f"wrote {md}")
+    if args.runtime_gate:
+        passed, msg = check_runtime_gate(summary["aggregates"])
+        print(msg, file=None if passed else sys.stderr)
+        if not passed:
+            return 1
     return 0
 
 

@@ -102,6 +102,21 @@ PAPER_KNOWN_WEAK_SPOTS: tuple[tuple[str, str], ...] = (
     ("smm", "L2"),
 )
 
+# Provenance of the stage-4 runtime models the validation tier scores
+# side by side (``aggregates.runtime_models``): what each one computes
+# and which literature its parameters transcribe.
+RUNTIME_MODEL_REFS: dict[str, str] = {
+    "eq": "paper Eq. 4–7 chain + two-mode T_CPU (§3.4; Table 5 "
+          "latency/throughput parameters)",
+    "ecm": "ECM-style in-core model: per-class port tables (Table 5 "
+           "sources + OSACA-style port counts; 'Bridging the "
+           "Architecture Gap' non-overlap data chain, chip-wide "
+           "shared-bandwidth saturation)",
+    "roofline": "two-term roofline: sustained-bandwidth memory stream "
+                "vs peak-FLOP compute (declared peaks on accelerators, "
+                "derived from Table 5 parameters on CPUs)",
+}
+
 
 def paper_claim(arch_name: str) -> PaperClaim:
     """Per-architecture claim, falling back to the overall aggregate
@@ -134,4 +149,5 @@ def reference_record() -> dict:
             for abbr, r in PAPER_TABLE4.items()
         },
         "known_weak_spots": [list(t) for t in PAPER_KNOWN_WEAK_SPOTS],
+        "runtime_models": dict(RUNTIME_MODEL_REFS),
     }

@@ -36,7 +36,11 @@ from pathlib import Path
 import numpy as np
 
 from repro.api import PredictionRequest, Session
-from repro.api.stages import default_runtime_model
+from repro.api.stages import (
+    default_runtime_model,
+    resolve_runtime_model,
+    supported_runtime_models,
+)
 from repro.hw.targets import CPU_TARGETS, resolve_target
 from repro.validate.reference import paper_claim, reference_record
 from repro.validate.store import ArtifactStore, atomic_write_bytes
@@ -171,11 +175,31 @@ def run_workload(abbr: str, spec: MatrixSpec,
             }
             for lvl in cell.hit_rates
         }
-        # same per-target model the Session used for t_pred_s (Eq. 4–7
-        # for the instruction-timed CPUs, roofline for the TPU)
+        # the cell's reference runtime: the per-target default model
+        # (Eq. 4–7 for the instruction-timed CPUs, roofline for the
+        # TPU) evaluated with the EXACT rates — this container's
+        # stand-in for the paper's wall-clock measurement
         t_exact = default_runtime_model(target).runtime(
             target, exact, w.op_counts, cell.cores, mode=cell.mode
         )["t_pred_s"]
+        # every named stage-4 model the target supports, scored against
+        # that ONE common reference.  Scoring each model against its
+        # own exact-rates prediction would measure rate sensitivity,
+        # not fidelity (a model that ignores hit rates scores a
+        # degenerate 0%) — the --runtime-gate comparison (ECM vs
+        # Roofline) needs a shared yardstick.
+        runtime_models = {}
+        for mname in supported_runtime_models(target):
+            model = resolve_runtime_model(mname, target)
+            t_sdcm = model.runtime(
+                target, cell.hit_rates, w.op_counts, cell.cores,
+                mode=cell.mode,
+            )["t_pred_s"]
+            runtime_models[mname] = {
+                "t_pred_s": float(t_sdcm),
+                "rel_err_pct":
+                    abs(t_sdcm - t_exact) / max(t_exact, 1e-12) * 100,
+            }
         rec = {
             "workload": w.workload_name,
             "target": cell.target,
@@ -186,6 +210,7 @@ def run_workload(abbr: str, spec: MatrixSpec,
             "t_exact_rates_s": float(t_exact),
             "runtime_rel_err_pct":
                 abs(cell.t_pred_s - t_exact) / max(t_exact, 1e-12) * 100,
+            "runtime_models": runtime_models,
         }
         bkey = (cell.target, cell.cores, cell.strategy, cell.mode)
         if bkey in binned_by_key:
@@ -242,6 +267,8 @@ def _merge(shards: list[dict], spec: MatrixSpec) -> dict:
     stats_total: dict[str, int] = {}
     all_hit, all_rt = [], []
     binned_devs: list[float] = []
+    # per named stage-4 model: model -> {"all": [...], arch: [...]}
+    model_errs: dict[str, dict[str, list]] = {}
 
     for shard in shards:
         w_hit, w_rt = [], []
@@ -258,6 +285,10 @@ def _merge(shards: list[dict], spec: MatrixSpec) -> dict:
             rt_by_arch.setdefault(arch, []).append(rt)
             all_rt.append(rt)
             w_rt.append(rt)
+            for mname, entry in rec.get("runtime_models", {}).items():
+                buckets = model_errs.setdefault(mname, {"all": []})
+                buckets["all"].append(entry["rel_err_pct"])
+                buckets.setdefault(arch, []).append(entry["rel_err_pct"])
         per_workload[shard["workload"]] = {
             "refs": shard["refs"],
             "trace_id": shard["trace_id"],
@@ -306,6 +337,21 @@ def _merge(shards: list[dict], spec: MatrixSpec) -> dict:
             "per_arch": per_arch,
             "per_level_hit_err_pct": {
                 lvl: float(np.mean(v)) for lvl, v in hit_by_level.items()
+            },
+            # every named stage-4 model scored identically (prediction
+            # with SDCM rates vs with exact rates); the --runtime-gate
+            # compares ecm vs roofline here
+            "runtime_models": {
+                mname: {
+                    "overall_rel_err_pct": float(np.mean(buckets["all"])),
+                    "cells": len(buckets["all"]),
+                    "per_arch": {
+                        arch: float(np.mean(errs))
+                        for arch, errs in buckets.items()
+                        if arch != "all"
+                    },
+                }
+                for mname, buckets in sorted(model_errs.items())
             },
             # fused device-binned profiles vs exact profiles, same SDCM:
             # the binned path is usable iff this stays under tolerance

@@ -32,8 +32,10 @@ if TYPE_CHECKING:  # pragma: no cover
     from repro.core.trace.types import LabeledTrace
 
 # Bump when lowering or trace extraction changes trace content for the
-# same (arch, step) — declared fingerprints hash this.
-MODEL_TRACE_VERSION = "1"
+# same (arch, step) — declared fingerprints hash this.  "2": op_counts
+# now carry the per-class op_class_mix (int/load/store split), and the
+# store's workload meta must not serve the old fp/loads-only counts.
+MODEL_TRACE_VERSION = "2"
 
 STEPS = ("prefill", "decode", "train")
 
@@ -132,7 +134,7 @@ class ModelTraceSource:
 
     def _lower(self) -> None:
         from repro.analysis.buffers import largest_buffers
-        from repro.analysis.hlo_cost import loop_aware_cost
+        from repro.analysis.hlo_cost import loop_aware_cost, op_class_mix
         from repro.analysis.hlo_trace import hlo_to_trace
         from repro.core.runtime_model import OpCounts
         from repro.workloads.tracegen import ELEM
@@ -143,16 +145,10 @@ class ModelTraceSource:
             loop_cap=self.loop_cap,
         )
         cost = loop_aware_cost(hlo)
-        # OpCounts approximation from the HLO cost model: HLO has no
-        # load/store split or integer-op census, so bytes-moved maps to
-        # element loads and transcendentals stand in for the slow-op
-        # (division) port.
-        self._op_counts = OpCounts(
-            fp_ops=float(cost["flops"]),
-            div_ops=float(cost["transcendental"]),
-            loads=float(cost["bytes"]) / ELEM,
-            total_bytes=float(cost["bytes"]),
-        )
+        # per-class mix (loads/stores split, addressing int ops,
+        # transcendental -> div port) — the instruction-aware runtime
+        # models need every class populated, not just fp/loads
+        self._op_counts = OpCounts(**op_class_mix(cost, elem_bytes=ELEM))
         buffers = largest_buffers(hlo, top=8, min_bytes=0)
         self._info = {
             "touched_bytes": info.get("touched_bytes"),

@@ -1,0 +1,374 @@
+"""ECM in-core model: hand-computed decompositions, stage wiring, and
+the runtime-model property suite (monotonicity, core-count saturation,
+crossover continuity)."""
+import math
+
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.api.stages import (
+    EqRuntimeModel,
+    RooflineRuntimeModel,
+    RUNTIME_MODELS,
+    default_runtime_model,
+    resolve_runtime_model,
+    supported_runtime_models,
+)
+from repro.core.incore import (
+    ClassTiming,
+    ECMRuntimeModel,
+    InCoreTimings,
+    ecm_cycles,
+    miss_fractions,
+    shared_transfer_cy,
+    t_comp_cy,
+    t_lsu_cy,
+    timings_of,
+    transfer_cy,
+)
+from repro.core.runtime_model import OpCounts
+from repro.hw.targets import (
+    ALL_TARGETS,
+    CPU_TARGETS,
+    GPU_SM90_LIKE,
+    HASWELL_I7_5960X,
+    TPU_V5E,
+)
+
+HSW = HASWELL_I7_5960X
+COUNTS = OpCounts(int_ops=4000.0, fp_ops=6000.0, div_ops=50.0,
+                  loads=3000.0, stores=1000.0, total_bytes=32000.0)
+
+
+def rates_for(target, value=0.9):
+    return {lvl.name: value for lvl in target.levels}
+
+
+# --- hand-computed pieces ----------------------------------------------------
+
+
+def test_class_timing_effective_beta():
+    t = ClassTiming(3.0, 1.0, 4)
+    assert t.beta_effective == 0.25
+    assert ClassTiming(3.0, 2.0).beta_effective == 2.0
+
+
+def test_t_comp_throughput_is_busiest_port_group():
+    tim = timings_of(HSW)
+    # int: 4000*(1/4)=1000, fp: 6000*(1/2)=3000, div: 50*8=400
+    assert t_comp_cy(tim, COUNTS, "throughput") == pytest.approx(3000.0)
+
+
+def test_t_comp_latency_is_dependency_chain():
+    tim = timings_of(HSW)
+    # 4000*1 + 6000*3 + 50*20
+    assert t_comp_cy(tim, COUNTS, "latency") == pytest.approx(23000.0)
+
+
+def test_t_comp_unknown_mode():
+    with pytest.raises(ValueError, match="mode"):
+        t_comp_cy(timings_of(HSW), COUNTS, "warp-speed")
+
+
+def test_t_lsu_counts_every_reference():
+    tim = timings_of(HSW)
+    # loads: 3000*(1/2)=1500, stores: 1000*1=1000
+    assert t_lsu_cy(tim, COUNTS) == pytest.approx(2500.0)
+
+
+def test_miss_fractions_from_cumulative_rates():
+    assert miss_fractions([0.5, 0.75, 0.9]) == pytest.approx(
+        [0.5, 0.25, 0.1])
+
+
+def test_miss_fractions_clamped_monotone():
+    # a non-monotone cumulative input cannot create traffic downstream
+    out = miss_fractions([0.9, 0.5, 1.2])
+    assert out == pytest.approx([0.1, 0.1, 0.0])
+
+
+def test_transfer_cy_hand_computed():
+    # Haswell betas beyond L1: L2=3, L3=8, RAM=14; 1000 references
+    out = transfer_cy(HSW, [0.9, 0.95, 0.99], 1000.0)
+    assert out == pytest.approx(
+        [0.1 * 1000 * 3.0, 0.05 * 1000 * 8.0, 0.01 * 1000 * 14.0])
+
+
+def test_transfer_cy_level_mismatch():
+    with pytest.raises(ValueError, match="levels"):
+        transfer_cy(HSW, [0.9, 0.95], 1000.0)
+
+
+def test_shared_transfer_uses_undivided_counts():
+    rates = [0.9, 0.95, 0.99]
+    # Haswell shared_level=-1 -> L3 (index 2): the L2->L3 and L3->RAM
+    # boundaries contend, L1->L2 stays private
+    expected = (0.05 * COUNTS.mem_ops * 8.0
+                + 0.01 * COUNTS.mem_ops * 14.0)
+    assert shared_transfer_cy(HSW, rates, COUNTS) == pytest.approx(expected)
+
+
+def test_ecm_cycles_throughput_decomposition():
+    rates = [0.9, 0.95, 0.99]
+    cyc = ecm_cycles(HSW, rates, COUNTS, mode="throughput")
+    transfers = sum(transfer_cy(HSW, rates, COUNTS.mem_ops))
+    assert cyc["t_comp_cy"] == pytest.approx(3000.0)
+    assert cyc["t_data_cy"] == pytest.approx(2500.0 + transfers)
+    assert cyc["t_core_cy"] == pytest.approx(
+        max(cyc["t_comp_cy"], cyc["t_data_cy"]))
+
+
+def test_ecm_cycles_latency_serializes():
+    rates = [0.9, 0.95, 0.99]
+    cyc = ecm_cycles(HSW, rates, COUNTS, mode="latency")
+    assert cyc["t_core_cy"] == pytest.approx(
+        cyc["t_comp_cy"] + cyc["t_data_cy"])
+    assert cyc["t_data_cy"] > 0
+
+
+def test_ecm_cycles_latency_level_mismatch():
+    with pytest.raises(ValueError, match="levels"):
+        ecm_cycles(HSW, [0.9], COUNTS, mode="latency")
+
+
+def test_timings_of_prefers_percls_table():
+    assert timings_of(HSW) is HSW.incore
+
+
+def test_timings_of_derives_fallback_from_instr():
+    import dataclasses
+
+    bare = dataclasses.replace(HSW, incore=None)
+    tim = timings_of(bare)
+    assert tim.fp_ops.beta == HSW.instr.beta_fp
+    assert tim.fp_ops.ports == 1
+    assert tim.loads.delta == HSW.level_latency_cy[0]
+    assert tim.loads.beta == HSW.level_beta_cy[0]
+
+
+def test_timings_of_rejects_untimed_target():
+    with pytest.raises(ValueError, match="neither"):
+        timings_of(TPU_V5E)
+
+
+def test_incore_tables_consistent_with_aggregate_betas():
+    """The per-class port tables and the aggregate Eq. 4–7 timings
+    describe the same silicon: beta_X == incore.X.beta / ports."""
+    for t in CPU_TARGETS.values():
+        assert t.incore.int_ops.beta_effective == t.instr.beta_int
+        assert t.incore.fp_ops.beta_effective == t.instr.beta_fp
+        assert t.incore.div_ops.beta_effective == t.instr.beta_div
+
+
+# --- stage wiring ------------------------------------------------------------
+
+
+def test_registry_names_match_model_attrs():
+    for name, cls in RUNTIME_MODELS.items():
+        assert cls.name == name
+
+
+def test_supported_models_per_target():
+    for t in CPU_TARGETS.values():
+        assert supported_runtime_models(t) == ("eq", "ecm", "roofline")
+    assert supported_runtime_models(GPU_SM90_LIKE) == (
+        "eq", "ecm", "roofline")
+    assert supported_runtime_models(TPU_V5E) == ("roofline",)
+
+
+def test_resolve_runtime_model():
+    assert isinstance(resolve_runtime_model("ecm", HSW), ECMRuntimeModel)
+    assert isinstance(resolve_runtime_model(None, HSW), EqRuntimeModel)
+    assert isinstance(resolve_runtime_model("auto", "tpu-v5e"),
+                      RooflineRuntimeModel)
+    with pytest.raises(ValueError, match="unknown runtime model"):
+        resolve_runtime_model("nope", HSW)
+    with pytest.raises(ValueError, match="does not support"):
+        resolve_runtime_model("ecm", TPU_V5E)
+    with pytest.raises(ValueError, match="needs a target"):
+        resolve_runtime_model("auto")
+
+
+def test_gpu_target_registered():
+    assert ALL_TARGETS["gpu-sm"] is GPU_SM90_LIKE
+    assert "gpu-sm" not in CPU_TARGETS  # paper matrix stays the 3 CPUs
+    # GPU signature: much wider throughput than latency would suggest
+    assert GPU_SM90_LIKE.incore.fp_ops.beta_effective < 0.1
+    assert GPU_SM90_LIKE.incore.fp_ops.delta >= 4.0
+
+
+def test_ecm_stage_interface_and_bound_labels():
+    model = ECMRuntimeModel()
+    out = model.runtime(HSW, rates_for(HSW), COUNTS, 2)
+    for key in ("t_pred_s", "t_cpu_s", "t_mem_s", "t_shared_bw_s",
+                "bound"):
+        assert key in out
+    assert out["t_pred_s"] > 0
+    assert out["bound"] in ("bandwidth", "compute", "data")
+    # compute-heavy mix on one core must be compute-bound
+    heavy = OpCounts(fp_ops=1e9, loads=10.0, stores=0.0, total_bytes=80.0)
+    assert model.runtime(
+        HSW, rates_for(HSW, 1.0), heavy, 1)["bound"] == "compute"
+
+
+def test_ecm_missing_level_key_raises():
+    with pytest.raises(KeyError):
+        ECMRuntimeModel().runtime(HSW, {"L1": 0.9}, COUNTS, 1)
+
+
+def test_roofline_tpu_unchanged():
+    """The generalized roofline must reproduce the original VMEM/HBM
+    formula bit-for-bit on the TPU target."""
+    model = RooflineRuntimeModel()
+    for rate in (0.0, 0.37, 0.9, 1.0):
+        for cores, mode in ((1, "throughput"), (4, "latency")):
+            share = COUNTS.scaled(1.0 / cores)
+            miss_bytes = (1.0 - rate) * share.total_bytes
+            t_mem = miss_bytes / TPU_V5E.hbm_bandwidth
+            if miss_bytes > 0.0:
+                t_mem += TPU_V5E.vmem_latency_s
+            t_cpu = share.fp_ops / TPU_V5E.peak_flops_bf16
+            expected = (max(t_mem, t_cpu) if mode == "throughput"
+                        else t_mem + t_cpu)
+            got = model.runtime(TPU_V5E, {"VMEM": rate}, COUNTS, cores,
+                                mode=mode)
+            assert got["t_pred_s"] == expected
+            assert got["t_mem_s"] == t_mem
+            assert got["t_cpu_s"] == t_cpu
+
+
+def test_default_model_unchanged():
+    assert isinstance(default_runtime_model(HSW), EqRuntimeModel)
+    assert isinstance(default_runtime_model(TPU_V5E), RooflineRuntimeModel)
+    # the GPU target carries instr timings, so its default stays Eq
+    assert isinstance(default_runtime_model(GPU_SM90_LIKE), EqRuntimeModel)
+
+
+# --- property suite ----------------------------------------------------------
+
+CPU_NAMES = sorted(CPU_TARGETS) + ["gpu-sm"]
+
+rate_st = st.floats(min_value=0.0, max_value=1.0)
+count_st = st.floats(min_value=0.0, max_value=1e7)
+mode_st = st.sampled_from(["throughput", "latency"])
+
+
+def _make_counts(ints, fps, divs, lds, sts_):
+    return OpCounts(int_ops=ints, fp_ops=fps, div_ops=divs, loads=lds,
+                    stores=sts_, total_bytes=(lds + sts_) * 8.0)
+
+
+@settings(max_examples=60, deadline=None)
+@given(
+    target_name=st.sampled_from(CPU_NAMES),
+    rates=st.lists(rate_st, min_size=3, max_size=3),
+    bump_idx=st.integers(min_value=0, max_value=2),
+    bump=st.floats(min_value=0.0, max_value=1.0),
+    model_name=st.sampled_from(["ecm", "roofline", "eq"]),
+    mode=mode_st,
+)
+def test_runtime_monotone_nonincreasing_in_hit_rates(
+        target_name, rates, bump_idx, bump, model_name, mode):
+    """Improving any level's hit rate never makes the prediction slower."""
+    target = ALL_TARGETS[target_name]
+    rates = rates[:len(target.levels)]
+    bump_idx = bump_idx % len(target.levels)
+    model = resolve_runtime_model(model_name, target)
+    better = list(rates)
+    better[bump_idx] = min(1.0, better[bump_idx] + bump)
+    names = [lvl.name for lvl in target.levels]
+    t_lo = model.runtime(target, dict(zip(names, rates)), COUNTS, 2,
+                         mode=mode)["t_pred_s"]
+    t_hi = model.runtime(target, dict(zip(names, better)), COUNTS, 2,
+                         mode=mode)["t_pred_s"]
+    assert t_hi <= t_lo + 1e-12 * max(t_lo, 1.0)
+
+
+@settings(max_examples=60, deadline=None)
+@given(
+    target_name=st.sampled_from(CPU_NAMES),
+    counts=st.tuples(count_st, count_st, count_st, count_st, count_st),
+    field_idx=st.integers(min_value=0, max_value=4),
+    extra=st.floats(min_value=0.0, max_value=1e7),
+    model_name=st.sampled_from(["ecm", "roofline", "eq"]),
+    mode=mode_st,
+)
+def test_runtime_monotone_nondecreasing_in_counts(
+        target_name, counts, field_idx, extra, model_name, mode):
+    """More work of any class never makes the prediction faster."""
+    target = ALL_TARGETS[target_name]
+    model = resolve_runtime_model(model_name, target)
+    rates = rates_for(target, 0.9)
+    more = list(counts)
+    more[field_idx] += extra
+    t_lo = model.runtime(target, rates, _make_counts(*counts), 2,
+                         mode=mode)["t_pred_s"]
+    t_hi = model.runtime(target, rates, _make_counts(*more), 2,
+                         mode=mode)["t_pred_s"]
+    assert t_hi >= t_lo - 1e-12 * max(t_hi, 1.0)
+
+
+@settings(max_examples=40, deadline=None)
+@given(
+    target_name=st.sampled_from(CPU_NAMES),
+    rates=st.lists(st.floats(min_value=0.1, max_value=0.99),
+                   min_size=3, max_size=3),
+)
+def test_ecm_saturates_with_cores_once_bandwidth_bound(target_name, rates):
+    """Per-core time scales 1/n, the chip-wide shared-transfer term
+    does not — past the saturation point, doubling cores changes
+    nothing and the prediction equals the shared-bandwidth term."""
+    target = ALL_TARGETS[target_name]
+    rates = rates[:len(target.levels)]
+    names = [lvl.name for lvl in target.levels]
+    rate_map = dict(zip(names, rates))
+    model = ECMRuntimeModel()
+    shared_cy = shared_transfer_cy(target, rates, COUNTS)
+    assert shared_cy > 0  # rates < 1 guarantee shared-level traffic
+    percore_cy = ecm_cycles(target, rates, COUNTS)["t_core_cy"]
+    n_sat = max(1, math.ceil(percore_cy / shared_cy))
+    t_sat = model.runtime(target, rate_map, COUNTS, n_sat)
+    t_2x = model.runtime(target, rate_map, COUNTS, 2 * n_sat)
+    sat_s = shared_cy * target.cycle_s
+    assert t_sat["t_pred_s"] == pytest.approx(sat_s)
+    assert t_2x["t_pred_s"] == pytest.approx(sat_s)
+    assert t_2x["bound"] == "bandwidth"
+    # and the curve is non-increasing on the way there
+    prev = math.inf
+    for n in (1, 2, n_sat, 2 * n_sat):
+        cur = model.runtime(target, rate_map, COUNTS, n)["t_pred_s"]
+        assert cur <= prev + 1e-15
+        prev = cur
+
+
+@settings(max_examples=40, deadline=None)
+@given(
+    target_name=st.sampled_from(CPU_NAMES),
+    rates=st.lists(st.floats(min_value=0.1, max_value=0.99),
+                   min_size=3, max_size=3),
+    eps=st.floats(min_value=1e-6, max_value=1e-3),
+)
+def test_ecm_crossover_is_continuous(target_name, rates, eps):
+    """Throughput mode is max(T_comp, T_data): scaling the fp work
+    through the compute/data crossover moves the prediction by no more
+    than the fp term's own slope — no jump at the switch."""
+    target = ALL_TARGETS[target_name]
+    rates = rates[:len(target.levels)]
+    names = [lvl.name for lvl in target.levels]
+    rate_map = dict(zip(names, rates))
+    tim = timings_of(target)
+    base = OpCounts(loads=3000.0, stores=1000.0, total_bytes=32000.0)
+    data_cy = ecm_cycles(target, rates, base)["t_data_cy"]
+    # fp count putting T_comp exactly at the crossover with T_data
+    fp_star = data_cy / tim.fp_ops.beta_effective
+    model = ECMRuntimeModel()
+
+    def t(fp):
+        c = OpCounts(fp_ops=fp, loads=base.loads, stores=base.stores,
+                     total_bytes=base.total_bytes)
+        return model.runtime(target, rate_map, c, 1)["t_pred_s"]
+
+    delta_fp = eps * fp_star
+    jump = abs(t(fp_star + delta_fp) - t(fp_star - delta_fp))
+    slope_bound = 2 * delta_fp * tim.fp_ops.beta_effective * target.cycle_s
+    assert jump <= slope_bound + 1e-18

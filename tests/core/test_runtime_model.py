@@ -103,3 +103,72 @@ def test_cumulative_to_conditional():
 def test_unknown_mode_raises():
     with pytest.raises(ValueError):
         t_cpu_s(HW, OpCounts(int_ops=1), mode="warp")
+
+
+def test_level_chain_length_mismatch_raises():
+    """Regression: zip used to truncate silently, so a 2-level rate
+    list against a 3-level target dropped the deepest level's cost."""
+    with pytest.raises(ValueError, match="one hit rate per level"):
+        level_chain([4.0, 12.0, 36.0], [0.9, 0.8], 240.0)
+    with pytest.raises(ValueError, match="one hit rate per level"):
+        effective_latency_cy(HW, [0.9, 0.8])
+    with pytest.raises(ValueError, match="one hit rate per level"):
+        effective_beta_cy(HW, [0.9, 0.8, 0.5, 0.1])
+
+
+def test_level_chain_empty_is_final_term():
+    assert level_chain([], [], 240.0) == 240.0
+
+
+# --- cumulative_to_conditional edge cases ------------------------------------
+
+
+def test_cumulative_to_conditional_exact_zero_and_one():
+    # nothing served anywhere until a final level that serves all
+    assert cumulative_to_conditional([0.0, 0.0, 1.0]) == pytest.approx(
+        [0.0, 0.0, 1.0])
+    # everything served at L1: downstream levels see no traffic, and
+    # their conditional rate is the 1.0 convention (miss_prob ~ 0)
+    assert cumulative_to_conditional([1.0, 1.0, 1.0]) == pytest.approx(
+        [1.0, 1.0, 1.0])
+    assert cumulative_to_conditional([0.0]) == pytest.approx([0.0])
+    assert cumulative_to_conditional([1.0]) == pytest.approx([1.0])
+
+
+def test_cumulative_to_conditional_nonmonotone_clamps():
+    """A dip in the cumulative sequence cannot mint negative service:
+    the conditional rate floors at 0 and downstream levels keep their
+    own (valid) conditional rates."""
+    cond = cumulative_to_conditional([0.9, 0.5, 0.95])
+    assert cond[0] == pytest.approx(0.9)
+    assert cond[1] == 0.0            # 0.5 < 0.9 -> nothing served here
+    assert 0.0 <= cond[2] <= 1.0
+    # and never out of range for any input
+    for cum in ([0.7, 0.2, 0.4], [1.0, 0.3, 0.9], [0.2, 1.0, 0.5]):
+        for c in cumulative_to_conditional(cum):
+            assert 0.0 <= c <= 1.0
+
+
+def test_cumulative_to_conditional_roundtrip_with_level_chain():
+    """Conditional rates reconstruct the cumulative sequence
+    (C_i = 1 - prod(1-c_j)), and the conditional chain equals the
+    explicit served-fraction sum over levels."""
+    cum = [0.5, 0.75, 0.9]
+    cond = cumulative_to_conditional(cum)
+    reach = 1.0
+    rebuilt = []
+    for c in cond:
+        reach *= (1.0 - c)
+        rebuilt.append(1.0 - reach)
+    assert rebuilt == pytest.approx(cum)
+
+    values = list(HW.level_latency_cy)
+    final = HW.ram_latency_cy
+    # explicit expansion: sum of (fraction served at level i) * v_i
+    reach = 1.0
+    expected = 0.0
+    for c, v in zip(cond, values):
+        expected += reach * c * v
+        reach *= (1.0 - c)
+    expected += reach * final
+    assert level_chain(values, cond, final) == pytest.approx(expected)

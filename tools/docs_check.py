@@ -20,6 +20,11 @@ Three checks:
    ``docs/lint.md`` must exist in ``repro.lint.rules.RULES``, and
    every registered rule must be documented there (both directions,
    so the catalogue can never drift from the registry).
+5. **Runtime timing tables** — the per-class (δ, β, ports) tables in
+   ``docs/runtime.md`` must match the ``incore`` tables on
+   ``repro.hw.targets.ALL_TARGETS`` both directions: every table-
+   carrying target documented, every documented section/row backed by
+   the code values.
 
 Run by the CI ``docs-check`` job and by ``tests/docs/test_docs.py``,
 so documentation drift fails the build instead of accumulating.
@@ -146,6 +151,82 @@ def check_lint_rules() -> list[str]:
     return problems
 
 
+# docs/runtime.md timing-table row: | class | δ | β | ports |
+TIMING_ROW_RE = re.compile(
+    r"^\|\s*(int|fp|div|load|store)\s*\|\s*([\d.]+)\s*\|\s*([\d.]+)\s*"
+    r"\|\s*(\d+)\s*\|\s*$"
+)
+# docs class labels -> InCoreTimings field names
+TIMING_CLASS_FIELD = {"int": "int_ops", "fp": "fp_ops", "div": "div_ops",
+                      "load": "loads", "store": "stores"}
+
+
+def _parse_timing_sections(text: str) -> dict[str, dict[str, tuple]]:
+    """``### <target>`` sections of docs/runtime.md -> their parsed
+    timing rows: {target: {class: (delta, beta, ports)}}."""
+    sections: dict[str, dict[str, tuple]] = {}
+    current: dict[str, tuple] | None = None
+    for line in text.splitlines():
+        if line.startswith("### "):
+            current = sections.setdefault(line[4:].strip(), {})
+            continue
+        m = TIMING_ROW_RE.match(line.strip())
+        if m and current is not None:
+            current[m.group(1)] = (
+                float(m.group(2)), float(m.group(3)), int(m.group(4))
+            )
+    # prose-only sections (no timing rows) are not timing tables
+    return {name: rows for name, rows in sections.items() if rows}
+
+
+def check_runtime_timings() -> list[str]:
+    """docs/runtime.md tables and hw.targets incore tables must agree
+    exactly, both directions."""
+    doc = REPO / "docs" / "runtime.md"
+    if not doc.is_file():
+        return ["docs/runtime.md: missing (the runtime-model timing "
+                "tables must be documented)"]
+    try:
+        from repro.hw.targets import ALL_TARGETS
+    except ImportError as exc:
+        return [f"runtime.md: cannot import repro.hw.targets ({exc})"]
+    documented = _parse_timing_sections(doc.read_text())
+    in_code = {
+        name: t.incore for name, t in ALL_TARGETS.items()
+        if getattr(t, "incore", None) is not None
+    }
+    problems = []
+    for name in sorted(set(in_code) - set(documented)):
+        problems.append(f"runtime.md: target {name!r} carries an incore "
+                        "table but has no timing section")
+    for name in sorted(set(documented) - set(in_code)):
+        problems.append(f"runtime.md: documents a timing table for "
+                        f"{name!r}, which has no incore table in "
+                        "repro.hw.targets")
+    for name in sorted(set(documented) & set(in_code)):
+        rows, table = documented[name], in_code[name]
+        for cls, field_name in TIMING_CLASS_FIELD.items():
+            timing = getattr(table, field_name)
+            if cls not in rows:
+                problems.append(f"runtime.md: {name}: class {cls!r} "
+                                "missing from the timing table")
+                continue
+            delta, beta, ports = rows[cls]
+            code_vals = (timing.delta, timing.beta, timing.ports)
+            if (abs(delta - timing.delta) > 1e-9
+                    or abs(beta - timing.beta) > 1e-9
+                    or ports != timing.ports):
+                problems.append(
+                    f"runtime.md: {name}/{cls}: documented "
+                    f"(δ={delta:g}, β={beta:g}, ports={ports}) != code "
+                    f"(δ={code_vals[0]:g}, β={code_vals[1]:g}, "
+                    f"ports={code_vals[2]})"
+                )
+        for cls in sorted(set(rows) - set(TIMING_CLASS_FIELD)):
+            problems.append(f"runtime.md: {name}: unknown class {cls!r}")
+    return problems
+
+
 def run() -> list[str]:
     sys.path.insert(0, str(REPO / "src"))
     sys.path.insert(0, str(REPO))
@@ -155,6 +236,7 @@ def run() -> list[str]:
         problems += check_paths(doc, text)
         problems += check_commands(doc, text)
     problems += check_lint_rules()
+    problems += check_runtime_timings()
     return problems
 
 
