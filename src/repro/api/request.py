@@ -55,6 +55,10 @@ class PredictionRequest:
     # window (bit-identical profiles, O(window + working set) memory);
     # None defers to the Session/builder default, 0 forces in-memory
     window_size: int | None = None
+    # build SHARDS-sampled profiles at this rate (0 < R <= 1) instead
+    # of exact histograms — constant memory, declared error_bound on
+    # each profile; None defers to the Session/builder mode
+    sampled_rate: float | None = None
 
     def __post_init__(self):
         object.__setattr__(self, "targets", tuple(self.targets))
@@ -69,6 +73,13 @@ class PredictionRequest:
             raise ValueError("core counts must be >= 1")
         if self.window_size is not None and self.window_size < 0:
             raise ValueError("window_size must be >= 0 (0 = in-memory)")
+        if self.sampled_rate is not None:
+            rate = float(self.sampled_rate)
+            if not (0.0 < rate <= 1.0):
+                raise ValueError(
+                    f"sampled_rate must be in (0, 1], got {self.sampled_rate!r}"
+                )
+            object.__setattr__(self, "sampled_rate", rate)
         if self.runtime_model is not None:
             # validate both the name and every target pairing up front —
             # a bad request fails at build time, not mid-grid

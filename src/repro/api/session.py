@@ -90,6 +90,14 @@ class Session:
     fused ``kernels/reuse_hist`` path instead of exact histograms —
     faster at scale, hit rates within ~1e-3 of the exact profiles, and
     stored under distinct (builder-fingerprinted) disk keys.
+
+    ``sampled=R`` builds SHARDS-sampled profiles at rate R through
+    :mod:`repro.core.reuse.sampled` — constant memory at any trace
+    length, each profile carrying its declared ``error_bound`` — also
+    under distinct disk keys (``+sampled{R}``), so exact, binned, and
+    sampled cells of one workload never collide in a shared store.
+    A per-request ``PredictionRequest.sampled_rate`` overrides the
+    session rate cell by cell through a cached variant builder.
     """
 
     def __init__(
@@ -101,20 +109,28 @@ class Session:
         cache: bool = True,
         window_size: int | None = None,
         binned: bool = False,
+        sampled: float | None = None,
         store=None,
         artifact_dir=None,
         verify_fingerprints: bool = False,
     ):
         if profile_builder is None:
             profile_builder = MimicProfileBuilder(
-                window_size=window_size, binned=binned
+                window_size=window_size, binned=binned, sampled=sampled
             )
         elif binned and not getattr(profile_builder, "binned", False):
             raise ValueError(
                 "binned=True only configures the default builder; pass a "
                 "builder with binned profile support instead"
             )
+        elif (sampled is not None
+              and getattr(profile_builder, "sampled", None) != sampled):
+            raise ValueError(
+                "sampled=R only configures the default builder; pass a "
+                "builder with sampled profile support instead"
+            )
         self.builder = profile_builder
+        self._sampled_builders: dict[float, object] = {}
         self.window_size = window_size
         self.cache_model = cache_model or AnalyticalSDCM()
         self.runtime_model = runtime_model  # None -> per-target default
@@ -285,9 +301,31 @@ class Session:
             return self.window_size or None  # normalized: one cache key
         return getattr(self.builder, "window_size", None)
 
+    def _builder_for(self, sampled: float | None):
+        """The Session builder, or a cached sampled-rate variant when a
+        per-request rate overrides it (``PredictionRequest.sampled_rate``).
+        Variants share nothing but the store — their fingerprints embed
+        the rate, so store keys never collide across rates."""
+        if sampled is None:
+            return self.builder
+        rate = float(sampled)
+        if getattr(self.builder, "sampled", None) == rate:
+            return self.builder
+        if not hasattr(self.builder, "with_sampled"):
+            raise ValueError(
+                "per-request sampled_rate needs a profile builder with "
+                "with_sampled support (the default MimicProfileBuilder)"
+            )
+        variant = self._sampled_builders.get(rate)
+        if variant is None:
+            variant = self.builder.with_sampled(rate)
+            self._sampled_builders[rate] = variant
+        return variant
+
     def artifacts(self, source, cores: int, *, strategy: str = "round_robin",
                   seed: int = 0, line_size: int = 64,
                   window_size: int | None = None,
+                  sampled: float | None = None,
                   need_traces: bool = False) -> ProfileArtifacts:
         """PRD/CRD profiles (+ underlying traces) for one grid cell.
 
@@ -297,6 +335,11 @@ class Session:
         and the interleaved shared trace never materialized (for the
         deterministic strategies) — ``artifacts.shared`` is ``None``.
 
+        ``sampled`` overrides the builder's sampling rate for this cell
+        (``None`` keeps the builder mode — exact unless the Session was
+        built with ``sampled=R``); the cell caches and store keys embed
+        the effective rate, so exact and sampled artifacts coexist.
+
         ``need_traces`` guarantees the returned artifact carries the
         mimicked private/shared traces: profile cells served from the
         disk store arrive trace-less (only the histograms persist) and
@@ -304,6 +347,8 @@ class Session:
         models (ExactLRU ground truth).
         """
         ws = self._resolve_window(window_size)
+        builder = self._builder_for(sampled)
+        rate = getattr(builder, "sampled", None)
         if self.cache_enabled:
             # id only — the trace is materialized lazily, so cells
             # served from memory/disk never build it (store hits cost
@@ -312,7 +357,7 @@ class Session:
             trace = None
         else:
             tid, trace = self.load(source)
-        key = (tid, line_size, cores, strategy, seed, ws)
+        key = (tid, line_size, cores, strategy, seed, ws, rate)
         if self.cache_enabled and key in self._profiles:
             self.stats.profile_hits += 1
             art = self._profiles[key]
@@ -330,7 +375,7 @@ class Session:
 
             art = load_profile_artifacts(
                 self.store, tid, line_size, cores, strategy, seed, ws,
-                builder_fingerprint(self.builder),
+                builder_fingerprint(builder),
             )
             if art is not None:
                 self.stats.store_hits += 1
@@ -342,32 +387,37 @@ class Session:
                 return art
         if trace is None:
             trace = self._trace_of(tid, source)
-        binned = bool(getattr(self.builder, "binned", False))
+        binned = bool(getattr(builder, "binned", False))
         if ws:
             art = self._streaming_artifacts(
-                tid, trace, cores, strategy, seed, line_size, ws
+                tid, trace, cores, strategy, seed, line_size, ws, builder
             )
         elif cores == 1:
-            rds = self._reuse_distances(tid, trace, line_size)
-            if hasattr(self.builder, "profile_of_distances"):
-                prof = self.builder.profile_of_distances(rds)
+            if rate is not None:
+                # sampled cells bypass the exact-rd cache entirely: the
+                # builder hash-filters the trace itself
+                prof = builder.profile(trace, line_size)
             else:
-                prof = profile_from_distances(rds)
+                rds = self._reuse_distances(tid, trace, line_size)
+                if hasattr(builder, "profile_of_distances"):
+                    prof = builder.profile_of_distances(rds)
+                else:
+                    prof = profile_from_distances(rds)
             art = ProfileArtifacts(
                 trace_id=tid, cores=1, strategy=strategy, seed=seed,
                 line_size=line_size, privates=[trace], shared=trace,
-                prd=prof, crd=prof, binned=binned,
+                prd=prof, crd=prof, binned=binned, sampled=rate,
             )
         else:
             privs = self._private_traces(tid, trace, cores)
             shared = self._shared_trace(tid, privs, cores, strategy, seed)
             # PRD of the master core (cores are symmetric by construction)
-            prd = self.builder.profile(privs[0], line_size)
-            crd = self.builder.profile(shared, line_size)
+            prd = builder.profile(privs[0], line_size)
+            crd = builder.profile(shared, line_size)
             art = ProfileArtifacts(
                 trace_id=tid, cores=cores, strategy=strategy, seed=seed,
                 line_size=line_size, privates=privs, shared=shared,
-                prd=prd, crd=crd, binned=binned,
+                prd=prd, crd=crd, binned=binned, sampled=rate,
             )
         self.stats.profile_builds += 1
         if self.cache_enabled:
@@ -379,7 +429,7 @@ class Session:
                 )
 
                 save_profile_artifacts(
-                    self.store, art, builder_fingerprint(self.builder)
+                    self.store, art, builder_fingerprint(builder)
                 )
                 self.stats.store_puts += 1
         return art
@@ -402,7 +452,7 @@ class Session:
         return dataclasses.replace(art, privates=privs, shared=shared)
 
     def _streaming_artifacts(self, tid, trace, cores, strategy, seed,
-                             line_size, ws) -> ProfileArtifacts:
+                             line_size, ws, builder=None) -> ProfileArtifacts:
         """Window-bounded cell build (ISSUE-2 tentpole).
 
         Uses the builder's streaming hooks when present (the default
@@ -410,8 +460,9 @@ class Session:
         them falls back to its own in-memory stages.
         """
         self.stats.streaming_builds += 1
-        builder = self.builder
+        builder = builder if builder is not None else self.builder
         binned = bool(getattr(builder, "binned", False))
+        rate = getattr(builder, "sampled", None)
         if hasattr(builder, "profile_windows"):
             def stream_profile(t, line):
                 return builder.profile_windows(t, line, ws)
@@ -424,6 +475,7 @@ class Session:
                 trace_id=tid, cores=1, strategy=strategy, seed=seed,
                 line_size=line_size, privates=[trace], shared=trace,
                 prd=prof, crd=prof, window_size=ws, binned=binned,
+                sampled=rate,
             )
         privs = self._private_traces(tid, trace, cores)
         prd = stream_profile(privs[0], line_size)
@@ -444,6 +496,7 @@ class Session:
             trace_id=tid, cores=cores, strategy=strategy, seed=seed,
             line_size=line_size, privates=privs, shared=shared,
             prd=prd, crd=crd, window_size=ws, binned=binned,
+            sampled=rate,
         )
 
     # --- execution --------------------------------------------------------
@@ -485,6 +538,7 @@ class Session:
                     seed=request.seed,
                     line_size=cell.target.levels[0].line_size,
                     window_size=request.window_size,
+                    sampled=request.sampled_rate,
                     need_traces=need_traces,
                 )
                 for cell in cells

@@ -139,6 +139,9 @@ class ProfileArtifacts:
     # True when prd/crd are device-binned log2 profiles (the fused
     # kernels/reuse_hist path) rather than exact histograms
     binned: bool = False
+    # sampling rate when prd/crd are SHARDS-sampled estimates
+    # (core.reuse.sampled); the profiles then carry ``error_bound``
+    sampled: float | None = None
 
     @property
     def has_traces(self) -> bool:
@@ -180,23 +183,61 @@ class MimicProfileBuilder:
     profiles track the exact profiles to well under 1e-3 absolute
     (asserted by the validation runner); the exact host path stays the
     default oracle.
+
+    ``sampled=R`` (0 < R <= 1) switches to SHARDS-style spatially-
+    hashed sampled profiles (:mod:`repro.core.reuse.sampled`): constant
+    memory at any trace length, with the declared DKW error bound
+    attached as ``profile.error_bound`` — ``repro.validate`` gates
+    SDCM deviation against it.  ``sampled`` and ``binned`` are
+    mutually exclusive profile modes; ``R == 1.0`` reproduces the
+    exact histograms bit for bit.
     """
 
     window_size: int | None = None  # class defaults: subclasses with
     binned: bool = False            # bare __init__ (test
-    # instrumentation) still resolve them
+    sampled: float | None = None    # instrumentation) still resolve them
+    sample_seed: int = 0            # spatial-hash key (fixed by default
+    # so sampled cells are deterministic and store keys stay stable)
 
     def __init__(self, window_size: int | None = None,
-                 binned: bool = False):
+                 binned: bool = False, sampled: float | None = None):
+        if sampled is not None:
+            if binned:
+                raise ValueError(
+                    "binned and sampled are mutually exclusive profile "
+                    "modes — pick one approximate representation"
+                )
+            if not (0.0 < float(sampled) <= 1.0):
+                raise ValueError(
+                    f"sampled rate must be in (0, 1], got {sampled!r}"
+                )
+            sampled = float(sampled)
         self.window_size = window_size
         self.binned = binned
+        self.sampled = sampled
 
     @property
     def store_fingerprint(self) -> str:
-        """Disk-store identity: binned cells must never be confused
-        with exact cells, so the binned builder stamps its keys."""
+        """Disk-store identity: binned/sampled cells must never be
+        confused with exact cells (or with each other, or with a
+        different rate), so approximate builders stamp their keys."""
         base = f"{type(self).__module__}.{type(self).__qualname__}"
-        return base + ("+binned" if self.binned else "")
+        if self.binned:
+            base += "+binned"
+        if self.sampled is not None:
+            base += f"+sampled{self.sampled:g}"
+            if self.sample_seed:
+                base += f"@{self.sample_seed}"
+        return base
+
+    def with_sampled(self, rate: float | None) -> "MimicProfileBuilder":
+        """Variant builder at a different sampling rate (Session uses
+        this for per-request ``sampled_rate`` overrides)."""
+        if rate == self.sampled:
+            return self
+        return MimicProfileBuilder(
+            window_size=self.window_size, sampled=rate
+        )
 
     def private_traces(self, trace, cores):
         return gen_private_traces(trace, cores)
@@ -207,6 +248,13 @@ class MimicProfileBuilder:
     def profile(self, trace, line_size):
         if self.window_size:
             return self.profile_windows(trace, line_size)
+        if self.sampled is not None:
+            from repro.core.reuse.sampled import sampled_reuse_profile
+
+            return sampled_reuse_profile(
+                trace.addresses, line_size,
+                rate=self.sampled, seed=self.sample_seed,
+            )
         return self.profile_of_distances(
             reuse_distances(trace.addresses, line_size)
         )
@@ -228,6 +276,13 @@ class MimicProfileBuilder:
         ws = window_size if window_size is not None else (self.window_size or 0)
         if ws < 1:
             raise ValueError("profile_windows needs window_size >= 1")
+        if self.sampled is not None:
+            from repro.core.reuse.sampled import sampled_profile_windows
+
+            return sampled_profile_windows(
+                source, line_size, rate=self.sampled,
+                seed=self.sample_seed, window_size=ws,
+            )
         if self.binned:
             from repro.core.reuse.fused import binned_profile_windows
 

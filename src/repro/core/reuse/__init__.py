@@ -25,6 +25,13 @@ from repro.core.reuse.profile import (
     profile_from_distances_incremental,
     profile_from_trace,
 )
+from repro.core.reuse.sampled import (
+    SAMPLE_BOUND_DELTA,
+    sample_lines_mask,
+    sampled_profile_windows,
+    sampled_reuse_profile,
+    sampling_error_bound,
+)
 from repro.core.reuse.crd import MulticoreProfiles, crd_profile, multicore_profiles
 
 __all__ = [
@@ -50,4 +57,9 @@ __all__ = [
     "MulticoreProfiles",
     "crd_profile",
     "multicore_profiles",
+    "SAMPLE_BOUND_DELTA",
+    "sample_lines_mask",
+    "sampled_profile_windows",
+    "sampled_reuse_profile",
+    "sampling_error_bound",
 ]

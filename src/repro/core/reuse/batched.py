@@ -112,7 +112,9 @@ def _prev_occurrence(keys: np.ndarray) -> np.ndarray:
     return prev
 
 
-def count_leq_before(values: np.ndarray) -> np.ndarray:
+def count_leq_before(
+    values: np.ndarray, *, num_shards: int | None = None
+) -> np.ndarray:
     """A[t] = #{s < t : values[s] <= values[t]}, fully vectorized.
 
     Bottom-up mergesort: at each level, blocks of width ``w`` are sorted
@@ -121,11 +123,31 @@ def count_leq_before(values: np.ndarray) -> np.ndarray:
     composite ``pair * stride + value`` keys, and the merged order is
     rebuilt from searchsorted ranks (no per-level argsort).  O(N log^2 N)
     comparisons, all inside numpy kernels.
+
+    ``num_shards > 1`` decomposes the count into that many contiguous
+    chunks: each chunk's *within*-chunk counts are an independent
+    mergesort pass (parallelizable across devices/workers), and the
+    *cross*-chunk contribution is one ``np.searchsorted`` of the chunk
+    against the sorted prefix of all earlier chunks.  The decomposition
+    is an exact integer identity — bit-identical to the monolithic pass
+    for every shard count (property-tested).
     """
     p = np.asarray(values, dtype=np.int64)
     n = p.size
     if n == 0:
         return np.empty(0, dtype=np.int64)
+    if num_shards is not None and num_shards > 1 and n > 1:
+        shards = min(int(num_shards), n)
+        bounds = np.linspace(0, n, shards + 1).astype(np.int64)
+        out = np.empty(n, dtype=np.int64)
+        for lo, hi in zip(bounds[:-1], bounds[1:]):
+            # independent per-chunk pass + one merge-step correction
+            out[lo:hi] = count_leq_before(p[lo:hi])
+            if lo:
+                prefix = np.sort(p[:lo], kind="stable")
+                out[lo:hi] += np.searchsorted(prefix, p[lo:hi],
+                                              side="right")
+        return out
     if n >= (1 << 31):  # composite pair*stride keys would overflow int64
         raise ValueError("count_leq_before supports < 2^31 elements")
     out = np.zeros(n, dtype=np.int64)
@@ -179,23 +201,29 @@ def count_leq_before(values: np.ndarray) -> np.ndarray:
     return out
 
 
-def reuse_distances_offline(keys: np.ndarray) -> np.ndarray:
+def reuse_distances_offline(
+    keys: np.ndarray, *, num_shards: int | None = None
+) -> np.ndarray:
     """Exact reuse distances of one key sequence, no sequential scan.
 
     ``rd[t] = #{s < t : prev[s] <= prev[t]} - prev[t] - 1`` — every
     earlier position with an earlier-or-equal previous occurrence is
     either a distinct line in the reuse window or accounted for by the
     ``prev[t] + 1`` correction.  Bit-identical to the Fenwick scan.
+    ``num_shards`` chunk-parallelizes the dominance count (see
+    :func:`count_leq_before`).
     """
     keys = np.asarray(keys)
     if keys.size == 0:
         return np.empty(0, dtype=np.int64)
     prev = _prev_occurrence(keys)
-    rd = count_leq_before(prev) - prev - 1
+    rd = count_leq_before(prev, num_shards=num_shards) - prev - 1
     return np.where(prev < 0, np.int64(INF_RD), rd)
 
 
-def _offline_segments(seg_ids: list[np.ndarray]) -> list[np.ndarray]:
+def _offline_segments(
+    seg_ids: list[np.ndarray], num_shards: int | None = None
+) -> list[np.ndarray]:
     """All segments in ONE offline pass over their stable concatenation.
 
     Takes the segments' already-densified ids (``compact_ids`` output —
@@ -212,7 +240,7 @@ def _offline_segments(seg_ids: list[np.ndarray]) -> list[np.ndarray]:
     flat = np.concatenate([s.astype(np.int64) for s in seg_ids])
     stride = np.int64(max(int(s.max()) for s in seg_ids if s.size) + 1)
     seg = np.repeat(np.arange(len(seg_ids), dtype=np.int64), lens)
-    rd = reuse_distances_offline(seg * stride + flat)
+    rd = reuse_distances_offline(seg * stride + flat, num_shards=num_shards)
     out = []
     off = 0
     for ln in lens:
@@ -394,6 +422,7 @@ def reuse_distances_batched(
     *,
     engine: str = "auto",
     window: int = DEFAULT_SEGMENT_WINDOW,
+    num_shards: int | None = None,
 ) -> list[np.ndarray]:
     """Exact reuse distances of many independent segments, batched.
 
@@ -404,9 +433,22 @@ def reuse_distances_batched(
     one vmapped Fenwick dispatch per window (``engine="fenwick"``) or
     one vectorized offline pass (``engine="offline"``).  ``"auto"``
     picks per bucket (see module docstring).
+
+    ``num_shards`` (default: the local device count, via
+    ``repro.dist.sharding.local_shard_count``) splits the work into
+    that many independent pieces: segments are LPT-partitioned across
+    shards (``repro.dist.sharding.partition_segments``) and each
+    shard's group evaluates separately; a lone oversized segment
+    instead chunk-parallelizes its offline dominance count.  The merge
+    is a scatter by original segment index, so results are
+    bit-identical to the monolithic pass for every shard count.
     """
     if engine not in ("auto", "fenwick", "offline"):
         raise ValueError(f"unknown batched RD engine: {engine}")
+    from repro.dist.sharding import local_shard_count, partition_segments
+
+    shards = (local_shard_count() if num_shards is None
+              else max(int(num_shards), 1))
     segs = [_as_lines(s, line_size) for s in segments]
     out: list[np.ndarray | None] = [None] * len(segs)
 
@@ -416,6 +458,22 @@ def reuse_distances_batched(
 
     todo = [i for i, o in enumerate(out) if o is None]
     if not todo:
+        return out  # type: ignore[return-value]
+
+    if shards > 1 and len(todo) > 1:
+        # deterministic LPT split; each group is an independent batched
+        # pass (the unit a multi-device dispatch hands one device), and
+        # the merge is a pure scatter by original index
+        groups = partition_segments([segs[i].size for i in todo], shards)
+        for group in groups:
+            if not group:
+                continue
+            sub = reuse_distances_batched(
+                [segs[todo[j]] for j in group],
+                engine=engine, window=window, num_shards=1,
+            )
+            for j, rd in zip(group, sub):
+                out[todo[j]] = rd
         return out  # type: ignore[return-value]
 
     ids = {i: compact_ids(segs[i]) for i in todo}
@@ -432,7 +490,15 @@ def reuse_distances_batched(
                             and cap <= _FENWICK_MAX_CAP))
         )
         if not use_fenwick:
-            for i, rd in zip(idxs, _offline_segments([ids[i] for i in idxs])):
+            # shards > 1 here means a single oversized segment (the
+            # multi-segment case already split above): parallelize its
+            # dominance count instead
+            count_shards = shards if shards > 1 else None
+            for i, rd in zip(
+                idxs,
+                _offline_segments([ids[i] for i in idxs],
+                                  num_shards=count_shards),
+            ):
                 out[i] = rd
             continue
         for i in idxs:

@@ -518,53 +518,3 @@ def reuse_distances_streaming(
     if not parts:
         return np.empty(0, dtype=np.int64)
     return np.concatenate(parts)
-
-
-def reuse_distances_sampled(
-    addresses, line_size: int = 1, *, rate: float = 0.1,
-    max_window: int = 100_000, seed: int = 0,
-) -> tuple[np.ndarray, np.ndarray]:
-    """Sampled exact reuse distances — the Schuff/Chennupati accelerator
-    (beyond-paper §Perf on the paper's own hot spot).
-
-    A random ``rate`` fraction of references get their RD computed
-    exactly as the distinct-line count of their reuse window (np.unique
-    — vectorized, no sequential Fenwick pass).  Windows longer than
-    ``max_window`` saturate to ``max_window`` distinct lines (they miss
-    every practical cache anyway).  Returns (distances, weights): each
-    sampled distance represents 1/rate references — feed both to
-    ``profile_from_pairs`` after aggregation, or directly to
-    ``ReuseProfile`` via np.unique.
-    """
-    arr = np.asarray(addresses, dtype=np.int64) // line_size
-    n = arr.size
-    if n == 0:
-        return np.empty(0, np.int64), np.empty(0, np.float64)
-    # previous-occurrence index per reference
-    last: dict[int, int] = {}
-    prev = np.full(n, -1, np.int64)
-    # vectorized prev via argsort-groupby
-    order = np.argsort(arr, kind="stable")
-    sorted_vals = arr[order]
-    same = np.empty(n, bool)
-    same[0] = False
-    same[1:] = sorted_vals[1:] == sorted_vals[:-1]
-    prev_sorted = np.where(same, np.concatenate([[0], order[:-1]]), -1)
-    prev[order] = prev_sorted
-
-    rng = np.random.default_rng(seed)
-    k = max(1, int(n * rate))
-    sample = np.sort(rng.choice(n, size=k, replace=False))
-    dists = np.empty(k, np.int64)
-    for i, idx in enumerate(sample):
-        j = prev[idx]
-        if j < 0:
-            dists[i] = -1  # infinity marker (cold miss)
-            continue
-        window = arr[j + 1: idx]
-        if window.size > max_window:
-            dists[i] = max_window
-        else:
-            dists[i] = np.unique(window).size
-    weights = np.full(k, n / k, np.float64)
-    return dists, weights

@@ -22,11 +22,18 @@ class ReuseProfile:
     distances : sorted distinct distances; ``INF_RD`` first when present.
     counts    : occurrence count per distance.
     total     : total number of accesses (== counts.sum()).
+    error_bound : declared sup-norm error of an approximate profile
+        (``core.reuse.sampled``); ``None`` for exact profiles, ``0.0``
+        for a sampled pass at rate 1.0.
     """
 
     distances: np.ndarray
     counts: np.ndarray
     total: int
+    error_bound: float | None = None
+
+    def with_error_bound(self, bound: float | None) -> "ReuseProfile":
+        return ReuseProfile(self.distances, self.counts, self.total, bound)
 
     @property
     def probabilities(self) -> np.ndarray:
@@ -60,12 +67,18 @@ class ReuseProfile:
             )
         dists = np.concatenate([p.distances for p in profiles])
         counts = np.concatenate([p.counts for p in profiles])
-        return profile_from_pairs(dists, counts)
+        merged = profile_from_pairs(dists, counts)
+        # merging approximate profiles can't tighten their error: the
+        # merged profile carries the loosest declared bound
+        bounds = [p.error_bound for p in profiles if p.error_bound is not None]
+        return merged.with_error_bound(max(bounds)) if bounds else merged
 
     def scaled(self, factor: float) -> "ReuseProfile":
         """Scale counts (e.g. trace-sampling extrapolation)."""
         counts = np.maximum(np.round(self.counts * factor), 0).astype(np.int64)
-        return ReuseProfile(self.distances, counts, int(counts.sum()))
+        return ReuseProfile(
+            self.distances, counts, int(counts.sum()), self.error_bound
+        )
 
 
 def profile_from_pairs(distances, counts) -> ReuseProfile:

@@ -1,0 +1,311 @@
+"""SHARDS-style sampled reuse profiles — constant memory, bounded error.
+
+The exact engines (`distance.py`, `batched.py`) compute every reuse
+distance; this module computes an *estimate* of the reuse profile from a
+spatially-hashed sample of the trace, the SHARDS construction (Waldspurger
+et al., FAST'15) adapted to the repo's profile/SDCM pipeline:
+
+1. **Spatial sampling.**  A cache line is *sampled* iff a deterministic
+   64-bit hash of its line id (keyed by ``seed``) falls below
+   ``rate * 2**64``.  Every reference to a sampled line is kept, every
+   reference to an unsampled line dropped — so the sampled subtrace
+   preserves the full reuse structure *of the sampled lines*.
+2. **Exact distances on the subtrace.**  Reuse distances of the sampled
+   subtrace are computed with the exact engines.  Because each distinct
+   line in any reuse window is kept independently with probability R,
+   the measured distance ``d`` is a binomial thinning of the true
+   distance ``D``: ``d ~ Binomial(D, R)``, so ``d / R`` is an unbiased
+   estimator of ``D``.
+3. **Rescaling.**  Finite distances rescale ``d -> round(d / R)``;
+   counts rescale ``c -> round(c / R)`` (each sampled reference stands
+   for ``1/R`` references).  ``INF_RD`` (cold-miss) mass keeps its
+   distance and rescales its count only.
+
+At ``rate == 1.0`` every line is sampled and rescaling is skipped
+entirely, so the result is bit-identical to the exact pass (property-
+tested).  Sampling is deterministic per ``(seed, rate)``.
+
+**Error bound.**  Spatial sampling keeps or drops every reference to a
+line *together*, so the profile estimate is a cluster (per-line) sample:
+its variance is governed by the line masses ``w_l`` (references per
+line), not the raw reference count.  The declared per-profile bound is a
+Bernstein sup-norm bound on the Horvitz-Thompson estimate of the
+reuse-distance CDF, with ``L = ln(2 (n+1) / SAMPLE_BOUND_DELTA)`` (the
+``n+1`` union-bounds over every CDF threshold)::
+
+    V        = (1 - R) * sum_l w_l^2 / (R * n^2)     # exact HT variance
+    eps      = sqrt(2 V L) + w_max L / (3 R n)
+    bound(R) = min(1, eps * n / S_hat + |n - S_hat| / S_hat)
+
+where ``S_hat = kept_refs / R`` is the sample's own mass estimate.  The
+line-mass moments ``sum_l w_l^2`` and ``w_max`` are themselves
+Horvitz-Thompson-estimated from the sampled lines (a sampled line's
+mass is exact — every one of its references is kept); callers without
+mass information fall back to the uniform-trace case ``w_l = 1`` and
+``bound = min(1, eps)``, the classical ``sqrt((1-R) ln(.) / (2 R n))``
+DKW shape.  The ``S_hat`` terms cover the Hajek ratio: the rescaled
+profile divides by its own estimated total (``kept / R``), so when the
+spatial filter drops a line that carries most of the trace the sample's
+moment estimates see none of that mass — but ``S_hat << n`` is directly
+observed, and the ratio correction inflates the bound toward 1 in
+exactly that regime.  SDCM's P(hit) is the expectation of a monotone
+[0,1] function of D, so a sup-norm CDF deviation bounds the hit-rate
+deviation by the same epsilon.  The bound holds with probability
+``>= 1 - SAMPLE_BOUND_DELTA``, is ``0.0`` at ``rate >= 1.0`` (the pass
+is exact), and in its uniform form is monotone non-increasing in both
+``rate`` and ``n`` (with measured mass moments it tracks the data: a
+fixed working set keeps the cluster variance ~constant as ``n`` grows).
+``repro.validate``'s ``sampled_check`` gates per-cell sampled-vs-exact
+SDCM deviation against exactly this declared bound — conservative at
+validation-smoke trace lengths, tight enough to be a real gate at the
+``validation-xxl`` (>= 1M refs) scale the sampled path exists for.
+
+Memory: the scan state is O(window + R * working set) — fixed-rate
+SHARDS, so peak RSS is flat in the trace length for a bounded working
+set (the ``--sampling-smoke`` benchmark gate).
+"""
+from __future__ import annotations
+
+import math
+
+import numpy as np
+
+from .distance import (
+    DEFAULT_WINDOW,
+    iter_address_windows,
+    reuse_distance_windows,
+    reuse_distances,
+)
+from .profile import (
+    ReuseProfile,
+    profile_from_distances,
+    profile_from_distances_incremental,
+    profile_from_pairs,
+)
+
+__all__ = [
+    "SAMPLE_BOUND_DELTA",
+    "sample_lines_mask",
+    "sampling_error_bound",
+    "sampled_reuse_profile",
+    "sampled_profile_windows",
+]
+
+# Confidence parameter of the DKW bound: the declared error bound holds
+# with probability >= 1 - SAMPLE_BOUND_DELTA over the hash seed.
+# docs/sampling.md documents this constant and tools/docs_check.py
+# cross-checks the documented value against this source.
+SAMPLE_BOUND_DELTA = 1e-6
+
+# splitmix64 finalizer constants — a well-mixed 64-bit permutation, so
+# thresholding the hash is equivalent to Bernoulli(rate) line sampling.
+_MIX_GAMMA = 0x9E3779B97F4A7C15
+_MIX_MULT_1 = 0xBF58476D1CE4E5B9
+_MIX_MULT_2 = 0x94D049BB133111EB
+_U64 = np.uint64
+
+
+def _hash_lines(lines: np.ndarray, seed: int) -> np.ndarray:
+    """Deterministic 64-bit spatial hash of line ids, keyed by seed."""
+    with np.errstate(over="ignore"):
+        z = lines.astype(np.int64).view(_U64) + _U64(
+            (int(seed) * _MIX_GAMMA) & 0xFFFFFFFFFFFFFFFF
+        )
+        z = (z ^ (z >> _U64(30))) * _U64(_MIX_MULT_1)
+        z = (z ^ (z >> _U64(27))) * _U64(_MIX_MULT_2)
+        return z ^ (z >> _U64(31))
+
+
+def sample_lines_mask(lines, *, rate: float, seed: int = 0) -> np.ndarray:
+    """Boolean keep-mask over line ids: hash(line, seed) < rate * 2^64.
+
+    Spatial, not temporal: every occurrence of a line shares one verdict,
+    which is what preserves reuse structure within the sample.
+    """
+    _check_rate(rate)
+    lines = np.asarray(lines, dtype=np.int64)
+    if rate >= 1.0:
+        return np.ones(lines.shape, dtype=bool)
+    threshold = _U64(min(int(rate * 2.0**64), 2**64 - 1))
+    return _hash_lines(lines, seed) < threshold
+
+
+def sampling_error_bound(
+    rate: float, n_refs: int, *,
+    sq_line_mass: float | None = None,
+    max_line_mass: float | None = None,
+    kept_refs: int | None = None,
+) -> float:
+    """Bernstein sup-norm bound on the sampled profile's CDF (and hence
+    on downstream SDCM hit-rate deviation).  0.0 when the pass is exact
+    (rate >= 1).
+
+    ``sq_line_mass`` is (an estimate of) ``sum_l w_l^2`` over the FULL
+    trace's per-line reference masses and ``max_line_mass`` the largest
+    single mass — the cluster-sampling design effect.  Omitting them
+    assumes a uniform trace (``w_l == 1``), which understates the bound
+    for skewed traces; the profile builders always pass the
+    Horvitz-Thompson estimates from the sample.
+
+    ``kept_refs`` is the raw number of references that survived the
+    spatial filter.  The profile normalizes by its OWN estimated mass
+    ``S_hat = kept_refs / R`` (a Hajek ratio estimator), not by the true
+    ``n`` — so the declared bound must also cover the ratio error, and
+    ``|n - S_hat|`` is directly observable.  When a single line carries
+    most of the trace and the filter drops it, the sample's moment
+    estimates see none of that mass, but ``S_hat << n`` exposes the loss
+    and inflates the bound toward 1 — without ``kept_refs`` the bound is
+    the pure HT form and silently understates exactly that regime.
+    """
+    _check_rate(rate)
+    if rate >= 1.0:
+        return 0.0
+    n = max(int(n_refs), 1)
+    ssq = float(n) if sq_line_mass is None else max(float(sq_line_mass), 1.0)
+    wmax = 1.0 if max_line_mass is None else max(float(max_line_mass), 1.0)
+    log_term = math.log(2.0 * (n + 1) / SAMPLE_BOUND_DELTA)
+    variance = (1.0 - rate) * ssq / (rate * float(n) ** 2)
+    eps = math.sqrt(2.0 * variance * log_term) + wmax * log_term / (3.0 * rate * n)
+    if kept_refs is None:
+        return min(1.0, eps)
+    s_hat = float(kept_refs) / rate
+    if s_hat <= 0.0:
+        return 1.0
+    return min(1.0, eps * (n / s_hat) + abs(n - s_hat) / s_hat)
+
+
+def _check_rate(rate: float) -> None:
+    if not (0.0 < float(rate) <= 1.0):
+        raise ValueError(f"sampling rate must be in (0, 1], got {rate!r}")
+
+
+def _mass_moments(counts: np.ndarray, rate: float) -> tuple[float, float]:
+    """HT estimates of (sum_l w_l^2, w_max) over the FULL trace from the
+    sampled lines' (exact) masses: each sampled line's squared mass
+    stands for 1/R lines' worth of second moment."""
+    if counts.size == 0:
+        return 0.0, 1.0
+    c = counts.astype(np.float64)
+    return float((c * c).sum() / rate), float(c.max())
+
+
+def _rescale(profile: ReuseProfile, rate: float, bound: float) -> ReuseProfile:
+    """d -> round(d / R), counts -> round(c / R); INF_RD mass keeps its
+    marker distance.  Attaches the declared error bound."""
+    inv = 1.0 / rate
+    dists = profile.distances.astype(np.float64)
+    finite = profile.distances >= 0
+    dists = np.where(finite, np.round(dists * inv), profile.distances)
+    counts = np.maximum(np.round(profile.counts * inv), 1).astype(np.int64)
+    rescaled = profile_from_pairs(dists.astype(np.int64), counts)
+    return rescaled.with_error_bound(bound)
+
+
+def sampled_reuse_profile(
+    addresses, line_size: int = 1, *, rate: float, seed: int = 0
+) -> ReuseProfile:
+    """Sampled reuse profile of an in-memory trace.
+
+    Bit-identical to ``profile_from_distances(reuse_distances(...))``
+    at ``rate == 1.0`` (modulo the attached ``error_bound == 0.0``).
+    """
+    _check_rate(rate)
+    arr = np.asarray(addresses, dtype=np.int64)
+    if line_size > 1:
+        arr = arr // line_size
+    n_refs = int(arr.size)
+    if rate >= 1.0:
+        exact = profile_from_distances(reuse_distances(arr))
+        return exact.with_error_bound(0.0)
+    kept = arr[sample_lines_mask(arr, rate=rate, seed=seed)]
+    ssq, wmax = _mass_moments(
+        np.unique(kept, return_counts=True)[1], rate
+    )
+    sub = profile_from_distances(reuse_distances(kept))
+    return _rescale(sub, rate, sampling_error_bound(
+        rate, n_refs, sq_line_mass=ssq, max_line_mass=wmax,
+        kept_refs=int(kept.size),
+    ))
+
+
+def _rebatch(chunks, window_size: int):
+    """Regroup variable-length chunks into uniform ``window_size``
+    windows (plus one final partial) without ever holding more than
+    one window's worth of buffered refs."""
+    buf: list[np.ndarray] = []
+    have = 0
+    for c in chunks:
+        if c.size == 0:
+            continue
+        buf.append(c)
+        have += int(c.size)
+        if have >= window_size:
+            flat = np.concatenate(buf)
+            off = 0
+            while flat.size - off >= window_size:
+                yield flat[off:off + window_size]
+                off += window_size
+            rest = flat[off:]
+            buf = [rest] if rest.size else []
+            have = int(rest.size)
+    if have:
+        yield np.concatenate(buf)
+
+
+def sampled_profile_windows(
+    source,
+    line_size: int = 1,
+    *,
+    rate: float,
+    seed: int = 0,
+    window_size: int = DEFAULT_WINDOW,
+) -> ReuseProfile:
+    """Streaming sampled profile — the trace never exists in memory.
+
+    Each address window is hash-filtered before it reaches the streaming
+    Fenwick scan, so the scan state tracks only sampled lines:
+    O(window + rate * working set) peak memory at any trace length.
+    Identical to :func:`sampled_reuse_profile` on the same trace (the
+    streaming scan is bit-identical to the in-memory pass).
+    """
+    _check_rate(rate)
+    n_refs = 0
+    # per-sampled-line masses for the bound's HT moments: O(sampled
+    # distinct lines) state, the same order as the scan's own tracking
+    mass: dict[int, int] = {}
+
+    def counted():
+        nonlocal n_refs
+        for win in iter_address_windows(
+            source, window_size=window_size, line_size=line_size
+        ):
+            n_refs += int(win.size)
+            kept = win[sample_lines_mask(win, rate=rate, seed=seed)]
+            if rate < 1.0 and kept.size:
+                vals, cnts = np.unique(kept, return_counts=True)
+                for v, c in zip(vals.tolist(), cnts.tolist()):
+                    mass[v] = mass.get(v, 0) + c
+            yield kept
+
+    if rate >= 1.0:
+        prof = profile_from_distances_incremental(
+            reuse_distance_windows(counted(), window_size=window_size)
+        )
+        return prof.with_error_bound(0.0)
+    # re-chunk the (variable-length) filtered windows to a uniform
+    # width: the scan is bit-identical across window boundaries, and
+    # uniform shapes keep the jitted scan at O(1) compilations instead
+    # of one per distinct filtered length (which is O(N) compile-cache
+    # memory — exactly what this path exists to avoid)
+    sub = profile_from_distances_incremental(
+        reuse_distance_windows(
+            _rebatch(counted(), window_size), window_size=window_size
+        )
+    )
+    ssq, wmax = _mass_moments(
+        np.fromiter(mass.values(), dtype=np.int64, count=len(mass)), rate
+    )
+    return _rescale(sub, rate, sampling_error_bound(
+        rate, n_refs, sq_line_mass=ssq, max_line_mass=wmax,
+        kept_refs=sum(mass.values()),
+    ))

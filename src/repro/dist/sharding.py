@@ -186,3 +186,35 @@ def shard(x, *logical_axes):
     return jax.lax.with_sharding_constraint(
         x, NamedSharding(rules.mesh, spec)
     )
+
+
+# --- work partitioning for the sharded reuse engines -------------------------
+
+
+def local_shard_count() -> int:
+    """Natural shard count for device-parallel host dispatch: the local
+    device count (1 on a single-CPU/laptop run, so sharded entry points
+    degenerate to the monolithic pass there)."""
+    return jax.local_device_count()
+
+
+def partition_segments(lengths, num_shards: int) -> list[list[int]]:
+    """Deterministic LPT partition of independent work items.
+
+    Items (identified by index into ``lengths``) are assigned
+    longest-first to the currently least-loaded shard; every tie breaks
+    on the lower index, so the partition is a pure function of
+    ``(lengths, num_shards)`` — reruns and resumptions shard
+    identically.  Within each shard, indices come back sorted, and
+    every shard list is present (possibly empty).
+    """
+    num_shards = max(int(num_shards), 1)
+    order = sorted(range(len(lengths)),
+                   key=lambda i: (-int(lengths[i]), i))
+    loads = [0] * num_shards
+    groups: list[list[int]] = [[] for _ in range(num_shards)]
+    for i in order:
+        s = min(range(num_shards), key=lambda j: (loads[j], j))
+        loads[s] += int(lengths[i])
+        groups[s].append(i)
+    return [sorted(g) for g in groups]

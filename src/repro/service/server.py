@@ -77,6 +77,7 @@ def build_request(payload: dict, workload) -> PredictionRequest:
             f"{sorted(ALL_TARGETS)})"
         )
     window = payload.get("window_size")
+    sampled = payload.get("sampled_rate")
     return PredictionRequest(
         targets=targets,
         core_counts=tuple(payload.get("core_counts") or (1,)),
@@ -88,6 +89,9 @@ def build_request(payload: dict, workload) -> PredictionRequest:
         runtime_model=payload.get("runtime_model"),
         seed=int(payload.get("seed", 0)),
         window_size=int(window) if window is not None else None,
+        # sampled profiles per request: the rate joins the frozen
+        # request, so the scheduler's dedup key separates rates
+        sampled_rate=float(sampled) if sampled is not None else None,
     )
 
 

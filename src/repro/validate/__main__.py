@@ -43,18 +43,44 @@ def check_runtime_gate(aggregates: dict) -> tuple[bool, str]:
     return False, f"FAIL: {msg} — ECM must not be worse than roofline"
 
 
+def check_sampling_gate(aggregates: dict) -> tuple[bool, str]:
+    """The --sampling-gate criterion: every sampled SDCM hit rate must
+    deviate from the exact-profile prediction by less than the error
+    bound its own profile declared (core.reuse.sampled).
+
+    Returns ``(passed, message)``; a matrix that scored no sampled
+    cells (``sampled_check=False``) fails loudly rather than passing
+    vacuously.
+    """
+    sampled = aggregates.get("sampled_profile") or {}
+    cells = sampled.get("cells", 0)
+    if not cells:
+        return False, ("sampling gate: matrix scored no sampled cells "
+                       "(was sampled_check disabled?)")
+    msg = (f"sampling gate: max deviation {sampled['max_abs_dev']:.2e} "
+           f"vs max declared bound {sampled['max_declared_bound']:.2e} "
+           f"over {cells} level cells at rate "
+           f"{sampled.get('rate')}")
+    if sampled.get("within_bound"):
+        return True, f"OK: {msg}"
+    return False, (f"FAIL: {msg} — {sampled['bound_exceedances']} cell(s) "
+                   "exceeded their declared error bound")
+
+
 def main(argv: list[str] | None = None) -> int:
     ap = argparse.ArgumentParser(prog="repro.validate")
     ap.add_argument("--smoke", action="store_true",
                     help="tiny sizes, run twice, assert zero recomputes")
     ap.add_argument("--sizes", default=None,
-                    choices=["validation", "validation-xl", "smoke",
-                             "default"],
+                    choices=["validation", "validation-xl",
+                             "validation-xxl", "smoke", "default"],
                     help="workload size preset (default: validation; "
                          "'validation-xl' = ~100-200k refs/workload, "
                          "feasible via the batched reuse-distance "
-                         "engines; 'default' = the quickstart/benchmark "
-                         "sizes)")
+                         "engines; 'validation-xxl' = >=1M "
+                         "refs/workload, the scale the SHARDS-sampled "
+                         "profile path targets; 'default' = the "
+                         "quickstart/benchmark sizes)")
     ap.add_argument("--workloads", nargs="+", default=None, metavar="NAME",
                     help="subset of registry workload names "
                          "(polybench/atx, model/llama3_8b/decode, ...); "
@@ -82,6 +108,10 @@ def main(argv: list[str] | None = None) -> int:
     ap.add_argument("--runtime-gate", action="store_true",
                     help="fail unless the ECM model's aggregate runtime "
                          "error is <= the roofline baseline's")
+    ap.add_argument("--sampling-gate", action="store_true",
+                    help="fail unless every sampled SDCM hit rate "
+                         "deviates from the exact prediction by less "
+                         "than its profile's declared error bound")
     args = ap.parse_args(argv)
 
     sizes = args.sizes or ("smoke" if args.smoke else "validation")
@@ -146,6 +176,11 @@ def main(argv: list[str] | None = None) -> int:
             print(msg, file=None if passed else sys.stderr)
             if not passed:
                 return 1
+        if args.sampling_gate:
+            passed, msg = check_sampling_gate(second["aggregates"])
+            print(msg, file=None if passed else sys.stderr)
+            if not passed:
+                return 1
         return 0
 
     summary = run_validation(spec, artifact_dir=args.artifact_dir,
@@ -164,6 +199,13 @@ def main(argv: list[str] | None = None) -> int:
               f"{binned['max_abs_dev']:.2e} over {binned['cells']} "
               f"level cells (tolerance {binned['tolerance']:.0e}, "
               f"{'OK' if binned['within_tolerance'] else 'EXCEEDED'})")
+    sampled = summary["aggregates"].get("sampled_profile", {})
+    if sampled.get("cells"):
+        print(f"sampled-profile deviation: max "
+              f"{sampled['max_abs_dev']:.2e} over {sampled['cells']} "
+              f"level cells at rate {sampled.get('rate')} (max declared "
+              f"bound {sampled['max_declared_bound']:.2e}, "
+              f"{'OK' if sampled['within_bound'] else 'EXCEEDED'})")
     models = summary["aggregates"].get("runtime_models", {})
     for mname, entry in models.items():
         print(f"runtime model {mname}: {entry['overall_rel_err_pct']:.2f}% "
@@ -174,6 +216,11 @@ def main(argv: list[str] | None = None) -> int:
         print(f"wrote {md}")
     if args.runtime_gate:
         passed, msg = check_runtime_gate(summary["aggregates"])
+        print(msg, file=None if passed else sys.stderr)
+        if not passed:
+            return 1
+    if args.sampling_gate:
+        passed, msg = check_sampling_gate(summary["aggregates"])
         print(msg, file=None if passed else sys.stderr)
         if not passed:
             return 1

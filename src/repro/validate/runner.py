@@ -39,6 +39,7 @@ from repro.api import PredictionRequest, Session
 from repro.api.stages import (
     default_runtime_model,
     resolve_runtime_model,
+    shared_level_index,
     supported_runtime_models,
 )
 from repro.hw.targets import CPU_TARGETS, resolve_target
@@ -71,6 +72,14 @@ class MatrixSpec:
     # device-histogram profile path) and record the absolute deviation
     # of its SDCM hit rates from the exact-profile prediction
     binned_check: bool = True
+    # also run every cell through a sampled=R Session (SHARDS-sampled
+    # profiles, core/reuse/sampled.py) and record the absolute
+    # deviation of its SDCM hit rates from the exact-profile
+    # prediction ALONGSIDE the per-level error bound each sampled
+    # profile declares — the gate's tolerance is the bound itself,
+    # not a fixed constant like the binned check's 1e-3
+    sampled_check: bool = True
+    sampled_rate: float = 0.5
 
     def matrix_id(self) -> str:
         """Stable id of the matrix — namespaces the result shards in
@@ -160,6 +169,19 @@ def run_workload(abbr: str, spec: MatrixSpec,
         }
         binned_stats = dataclasses.asdict(bsession.stats)
 
+    sampled_by_key: dict[tuple, dict] = {}
+    sampled_session = None
+    sampled_stats = None
+    if spec.sampled_check:
+        # separate sampled Session, same store: ``+sampled{R}``
+        # fingerprints keep its cells disjoint from exact/binned ones
+        sampled_session = Session(store=store, sampled=spec.sampled_rate)
+        spred = sampled_session.predict(w, request)
+        sampled_by_key = {
+            (p.target, p.cores, p.strategy, p.mode): p.hit_rates
+            for p in spred
+        }
+
     records = []
     for cell in predset:
         target = resolve_target(cell.target)
@@ -219,12 +241,40 @@ def run_workload(abbr: str, spec: MatrixSpec,
                 lvl: abs(float(brates[lvl]) - float(cell.hit_rates[lvl]))
                 for lvl in cell.hit_rates
             }
+        if bkey in sampled_by_key:
+            srates = sampled_by_key[bkey]
+            rec["sampled_abs_dev"] = {
+                lvl: abs(float(srates[lvl]) - float(cell.hit_rates[lvl]))
+                for lvl in cell.hit_rates
+            }
+            # per-level DECLARED bound: private levels read the PRD
+            # estimate, the shared level(s) the CRD one (same routing
+            # as AnalyticalSDCM) — served from the sampled Session's
+            # in-memory cell cache, so this costs zero rebuilds
+            sart = sampled_session.artifacts(
+                w, cell.cores, strategy=cell.strategy, seed=spec.seed,
+                line_size=target.levels[0].line_size,
+            )
+            shared_idx = shared_level_index(target)
+            rec["sampled_bound"] = {
+                lvl.name: float(
+                    (sart.crd if i >= shared_idx else sart.prd).error_bound
+                    or 0.0
+                )
+                for i, lvl in enumerate(target.levels)
+                if lvl.name in cell.hit_rates
+            }
         records.append(rec)
 
     stats = dataclasses.asdict(session.stats)
-    if binned_stats:  # fold the binned Session's counters in
-        for k, v in binned_stats.items():
-            stats[k] = stats.get(k, 0) + int(v)
+    if sampled_session is not None:
+        # read AFTER the record loop: the bound lookups go through the
+        # sampled Session's cell cache and must show up as hits there
+        sampled_stats = dataclasses.asdict(sampled_session.stats)
+    for extra in (binned_stats, sampled_stats):
+        if extra:  # fold the check Sessions' counters in
+            for k, v in extra.items():
+                stats[k] = stats.get(k, 0) + int(v)
     # refs come from the store's workload meta when the trace never
     # materialized this run (warm store); only a store-less run has to
     # load the trace just to count it
@@ -267,6 +317,9 @@ def _merge(shards: list[dict], spec: MatrixSpec) -> dict:
     stats_total: dict[str, int] = {}
     all_hit, all_rt = [], []
     binned_devs: list[float] = []
+    sampled_devs: list[float] = []
+    sampled_bounds: list[float] = []
+    sampled_exceed = 0
     # per named stage-4 model: model -> {"all": [...], arch: [...]}
     model_errs: dict[str, dict[str, list]] = {}
 
@@ -281,6 +334,14 @@ def _merge(shards: list[dict], spec: MatrixSpec) -> dict:
                 all_hit.append(err)
                 w_hit.append(err)
             binned_devs.extend(rec.get("binned_abs_dev", {}).values())
+            sdev = rec.get("sampled_abs_dev", {})
+            sbound = rec.get("sampled_bound", {})
+            for lvl, dev in sdev.items():
+                bound = float(sbound.get(lvl, 0.0))
+                sampled_devs.append(float(dev))
+                sampled_bounds.append(bound)
+                if float(dev) > bound:
+                    sampled_exceed += 1
             rt = rec["runtime_rel_err_pct"]
             rt_by_arch.setdefault(arch, []).append(rt)
             all_rt.append(rt)
@@ -365,6 +426,25 @@ def _merge(shards: list[dict], spec: MatrixSpec) -> dict:
                 "within_tolerance": bool(
                     not binned_devs or float(np.max(binned_devs)) <= 1e-3
                 ),
+            },
+            # SHARDS-sampled profiles vs exact profiles, same SDCM:
+            # unlike the binned check's fixed 1e-3, each level cell is
+            # gated against the error bound ITS OWN profile declared
+            # (core/reuse/sampled.sampling_error_bound), so the
+            # tolerance tightens automatically as traces grow
+            "sampled_profile": {
+                "cells": len(sampled_devs),
+                "rate": spec.sampled_rate if spec.sampled_check else None,
+                "max_abs_dev": float(np.max(sampled_devs))
+                if sampled_devs else 0.0,
+                "mean_abs_dev": float(np.mean(sampled_devs))
+                if sampled_devs else 0.0,
+                "max_declared_bound": float(np.max(sampled_bounds))
+                if sampled_bounds else 0.0,
+                "mean_declared_bound": float(np.mean(sampled_bounds))
+                if sampled_bounds else 0.0,
+                "bound_exceedances": int(sampled_exceed),
+                "within_bound": bool(sampled_exceed == 0),
             },
         },
         "per_workload": per_workload,

@@ -50,7 +50,12 @@ import numpy as np
 # fingerprints (repro.workloads.registry) rather than content hashes,
 # and the ``workload`` kind records per-fingerprint metadata (recorded
 # trace_content_id cross-check, refs, model-trace op counts).
-STORE_VERSION = 3
+# v4: profile cells may be SHARDS-sampled (core.reuse.sampled): meta
+# gains the ``sampled`` rate and per-profile ``prd_error_bound`` /
+# ``crd_error_bound``, and sampled builders stamp their keys with
+# ``+sampled{rate}`` — exact, binned, and sampled cells of one
+# workload can never be confused in a shared store.
+STORE_VERSION = 4
 
 _KINDS = ("profile", "exact", "validation", "workload")
 
@@ -278,6 +283,9 @@ def save_profile_artifacts(store: ArtifactStore, art,
             "line_size": art.line_size,
             "window_size": art.window_size,
             "binned": bool(getattr(art, "binned", False)),
+            "sampled": getattr(art, "sampled", None),
+            "prd_error_bound": art.prd.error_bound,
+            "crd_error_bound": art.crd.error_bound,
             "builder": builder,
         },
     )
@@ -304,11 +312,14 @@ def load_profile_artifacts(
 
     def prof(prefix: str) -> ReuseProfile:
         counts = arrays[f"{prefix}_counts"].astype(np.int64)
+        bound = meta.get(f"{prefix}_error_bound")
         return ReuseProfile(
             arrays[f"{prefix}_distances"].astype(np.int64),
             counts, int(counts.sum()),
+            float(bound) if bound is not None else None,
         )
 
+    sampled = meta.get("sampled")
     return ProfileArtifacts(
         trace_id=meta["trace_id"], cores=int(meta["cores"]),
         strategy=meta["strategy"], seed=int(meta["seed"]),
@@ -316,4 +327,5 @@ def load_profile_artifacts(
         prd=prof("prd"), crd=prof("crd"),
         window_size=meta.get("window_size"),
         binned=bool(meta.get("binned", False)),
+        sampled=float(sampled) if sampled is not None else None,
     )

@@ -256,7 +256,8 @@ def register_model_workloads(registry) -> None:
                 name=f"model/{slug}/{step}",
                 build=build,
                 size_kwargs=size_kwargs,
-                presets=("smoke", "validation", "validation-xl"),
+                presets=("smoke", "validation", "validation-xl",
+                         "validation-xxl"),
                 aliases=aliases,
                 version=MODEL_TRACE_VERSION,
                 description=f"{arch_id} {step} step via HLO lowering",

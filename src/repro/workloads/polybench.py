@@ -630,10 +630,30 @@ def all_workloads(subset: list[str] | None = None) -> list[Workload]:
 # monolithic Fenwick scan (O(N)-per-step timeline), feasible now that
 # reuse_distances routes large traces through the batched/offline
 # engines and the exact-LRU baselines run per-set batched scans
-# (core/reuse/batched.py).  Default maker sizes (no preset) are the
+# (core/reuse/batched.py).  "validation-xxl" targets >= 1M references
+# per workload (every entry verified >= 1e6), the scale the
+# SHARDS-sampled profile path (core/reuse/sampled.py) exists for —
+# exact full-matrix passes remain possible but slow, sampled passes
+# stay constant-memory.  Default maker sizes (no preset) are the
 # quickstart/benchmark sizes.
 
 SIZE_PRESETS: dict[str, dict[str, dict]] = {
+    "validation-xxl": {
+        "adi": dict(n=230, tsteps=2),
+        "atx": dict(n=520),
+        "bcg": dict(n=520),
+        "blk": dict(num_options=36000),
+        "c2d": dict(n=320),
+        "cov": dict(n=99),
+        "dgn": dict(nq=27, nr=27, npp=27),
+        "dbn": dict(n=720),
+        "grm": dict(n=74),
+        "jcb": dict(n=254, tsteps=2),
+        "lu": dict(n=102),
+        "2mm": dict(n=64),
+        "mvt": dict(n=520),
+        "smm": dict(n=88),
+    },
     "validation-xl": {
         "adi": dict(n=56, tsteps=2),
         "atx": dict(n=190),

@@ -212,10 +212,12 @@ def declared_fingerprint(name: str, sizes: str | None = None) -> str:
 
 _SYNTH_SIZES = {
     "stream": {None: dict(elems=8192, passes=2),
+               "validation-xxl": dict(elems=524288, passes=2),
                "validation-xl": dict(elems=65536, passes=2),
                "validation": dict(elems=4096, passes=2),
                "smoke": dict(elems=1024, passes=2)},
     "stride": {None: dict(elems=4096, stride=8, passes=4),
+               "validation-xxl": dict(elems=262144, stride=8, passes=4),
                "validation-xl": dict(elems=32768, stride=8, passes=4),
                "validation": dict(elems=2048, stride=8, passes=4),
                "smoke": dict(elems=512, stride=8, passes=4)},
@@ -262,6 +264,7 @@ def _register_synthetics(registry: WorkloadRegistry) -> None:
             name=f"synthetic/{kind}",
             build=build,
             size_kwargs=size_kwargs,
-            presets=("smoke", "validation", "validation-xl"),
+            presets=("smoke", "validation", "validation-xl",
+                     "validation-xxl"),
             description=f"tracegen {kind} pattern",
         ))

@@ -1,0 +1,274 @@
+"""Functional stand-in for ``hypothesis`` when it is not installed.
+
+The old conftest shim registered an *inert* stub: every ``@given`` test
+silently skipped, so the property suites (reuse-distance oracles, SDCM
+monotonicity, sampling unbiasedness, ...) never ran in a bare
+environment.  This module is a minimal but REAL random-testing engine
+covering exactly the subset of the hypothesis API the test suites use:
+
+* strategies: ``integers(min_value, max_value)``,
+  ``floats(min_value, max_value)``, ``lists(elements, min_size,
+  max_size)``, ``sampled_from(seq)``, ``tuples(*strategies)``
+* ``@given`` with positional or keyword strategies (positional
+  strategies bind to the function's rightmost parameters, like
+  hypothesis, so fixtures can occupy the left)
+* ``@settings(max_examples=..., deadline=...)`` above or below
+  ``@given``
+* ``assume(cond)`` — discards the current example
+
+Determinism: every test draws from a PRNG seeded by its own qualified
+name, so a failure reproduces run over run.  The first two examples are
+the all-minimal and all-maximal corners (empty lists, bound endpoints)
+— the cheap shrunk cases hypothesis would try first — and the rest are
+uniform draws.  There is no shrinking; the falsifying example is
+attached to the exception instead.
+
+When the real ``hypothesis`` is installed (the ``test`` extra, CI),
+conftest never imports this module.
+"""
+from __future__ import annotations
+
+import functools
+import hashlib
+import inspect
+import random
+import sys
+import types
+
+_DEFAULT_MAX_EXAMPLES = 50
+
+
+class Unsatisfied(Exception):
+    """Raised by ``assume(False)`` — discards the current example."""
+
+
+def assume(condition) -> bool:
+    if not condition:
+        raise Unsatisfied()
+    return True
+
+
+# --- strategies -------------------------------------------------------------
+#
+# ``phase`` 0 draws every strategy's minimal corner, 1 the maximal one,
+# anything else a uniform random value.
+
+
+class Strategy:
+    def draw(self, rng: random.Random, phase: int):
+        raise NotImplementedError
+
+
+class _Integers(Strategy):
+    def __init__(self, min_value=None, max_value=None):
+        self.lo = -(1 << 16) if min_value is None else int(min_value)
+        self.hi = (1 << 16) if max_value is None else int(max_value)
+        if self.lo > self.hi:
+            raise ValueError(f"integers: min {self.lo} > max {self.hi}")
+
+    def draw(self, rng, phase):
+        if phase == 0:
+            return self.lo
+        if phase == 1:
+            return self.hi
+        return rng.randint(self.lo, self.hi)
+
+
+class _Floats(Strategy):
+    def __init__(self, min_value=None, max_value=None, *,
+                 allow_nan=False, allow_infinity=False):
+        # bounded draws only: NaN/inf never produced, the flags exist
+        # for signature compatibility
+        self.lo = -1e6 if min_value is None else float(min_value)
+        self.hi = 1e6 if max_value is None else float(max_value)
+        if self.lo > self.hi:
+            raise ValueError(f"floats: min {self.lo} > max {self.hi}")
+
+    def draw(self, rng, phase):
+        if phase == 0:
+            return self.lo
+        if phase == 1:
+            return self.hi
+        return rng.uniform(self.lo, self.hi)
+
+
+class _Lists(Strategy):
+    def __init__(self, elements: Strategy, min_size=0, max_size=None):
+        self.elements = elements
+        self.min_size = int(min_size)
+        self.max_size = (self.min_size + 16 if max_size is None
+                         else int(max_size))
+
+    def draw(self, rng, phase):
+        if phase == 0:
+            n = self.min_size
+        elif phase == 1:
+            n = self.max_size
+        else:
+            n = rng.randint(self.min_size, self.max_size)
+        return [self.elements.draw(rng, phase) for _ in range(n)]
+
+
+class _SampledFrom(Strategy):
+    def __init__(self, seq):
+        self.seq = list(seq)
+        if not self.seq:
+            raise ValueError("sampled_from: empty sequence")
+
+    def draw(self, rng, phase):
+        if phase == 0:
+            return self.seq[0]
+        if phase == 1:
+            return self.seq[-1]
+        return rng.choice(self.seq)
+
+
+class _Tuples(Strategy):
+    def __init__(self, *strategies):
+        self.strategies = strategies
+
+    def draw(self, rng, phase):
+        return tuple(s.draw(rng, phase) for s in self.strategies)
+
+
+def integers(min_value=None, max_value=None) -> Strategy:
+    return _Integers(min_value, max_value)
+
+
+def floats(min_value=None, max_value=None, **kw) -> Strategy:
+    return _Floats(min_value, max_value, **kw)
+
+
+def lists(elements, min_size=0, max_size=None) -> Strategy:
+    return _Lists(elements, min_size, max_size)
+
+
+def sampled_from(seq) -> Strategy:
+    return _SampledFrom(seq)
+
+
+def tuples(*strategies) -> Strategy:
+    return _Tuples(*strategies)
+
+
+# --- decorators -------------------------------------------------------------
+
+
+def settings(*args, max_examples=_DEFAULT_MAX_EXAMPLES, **_ignored):
+    """Record ``max_examples``; ``deadline``/profiles are ignored.
+
+    Works above OR below ``@given``: the attribute is read lazily at
+    call time, and both decorators return the same function object they
+    received (mutated), so ordering cannot drop it.
+    """
+
+    def deco(fn):
+        fn._fallback_settings = {"max_examples": int(max_examples)}
+        return fn
+
+    if args and callable(args[0]):  # bare ``@settings`` usage
+        return deco(args[0])
+    return deco
+
+
+def given(*arg_strategies, **kw_strategies):
+    bad = [s for s in (*arg_strategies, *kw_strategies.values())
+           if not isinstance(s, Strategy)]
+    if bad:
+        raise TypeError(f"@given expects strategies, got {bad!r}")
+
+    def deco(fn):
+        sig = inspect.signature(fn)
+        names = list(sig.parameters)
+        # positional strategies bind rightmost (hypothesis convention,
+        # keeps self/fixtures on the left)
+        strat_map = dict(zip(names[len(names) - len(arg_strategies):],
+                             arg_strategies))
+        overlap = strat_map.keys() & kw_strategies.keys()
+        if overlap:
+            raise TypeError(f"@given got {sorted(overlap)} both "
+                            "positionally and by keyword")
+        strat_map.update(kw_strategies)
+        unknown = [n for n in strat_map if n not in names]
+        if unknown:
+            raise TypeError(f"@given strategies {unknown} do not match "
+                            f"parameters of {fn.__qualname__}")
+        remaining = [p for p in sig.parameters.values()
+                     if p.name not in strat_map]
+
+        @functools.wraps(fn)
+        def wrapper(*args, **kwargs):
+            conf = getattr(wrapper, "_fallback_settings", None) or \
+                getattr(fn, "_fallback_settings", None) or {}
+            max_examples = conf.get("max_examples", _DEFAULT_MAX_EXAMPLES)
+            qualname = f"{fn.__module__}.{fn.__qualname__}"
+            seed = int.from_bytes(
+                hashlib.sha1(qualname.encode()).digest()[:8], "big"
+            )
+            rng = random.Random(seed)
+            ran, attempts = 0, 0
+            # assume() discards don't count as examples, but a filter
+            # that rejects nearly everything must terminate loudly
+            while ran < max_examples:
+                if attempts > max_examples * 10 + 100:
+                    raise RuntimeError(
+                        f"{qualname}: assume() rejected too many "
+                        f"examples ({attempts} attempts for {ran} runs)"
+                    )
+                attempts += 1
+                phase = ran if ran < 2 else 2
+                drawn = {n: s.draw(rng, phase)
+                         for n, s in strat_map.items()}
+                try:
+                    fn(*args, **{**kwargs, **drawn})
+                except Unsatisfied:
+                    continue
+                except Exception as exc:
+                    note = (f"falsifying example ({qualname}, "
+                            f"seed={seed}): {drawn!r}")
+                    if hasattr(exc, "add_note"):
+                        exc.add_note(note)
+                    else:  # pragma: no cover - pre-3.11
+                        print(note, file=sys.stderr)
+                    raise
+                ran += 1
+
+        # hide the strategy-bound parameters from pytest's fixture
+        # resolution: only the remaining ones (normally none) are real
+        wrapper.__signature__ = sig.replace(parameters=remaining)
+        wrapper.hypothesis = types.SimpleNamespace(inner_test=fn)
+        return wrapper
+
+    return deco
+
+
+def example(*_args, **_kwargs):
+    """No-op compatibility decorator (explicit examples are already
+    covered by the deterministic corner phases)."""
+    return lambda fn: fn
+
+
+# --- module installation ----------------------------------------------------
+
+
+def install() -> None:
+    """Register ``hypothesis`` / ``hypothesis.strategies`` modules built
+    from this engine (no-op if the real package is importable)."""
+    if "hypothesis" in sys.modules:
+        return
+    strategies = types.ModuleType("hypothesis.strategies")
+    for fn in (integers, floats, lists, sampled_from, tuples):
+        setattr(strategies, fn.__name__, fn)
+    mod = types.ModuleType("hypothesis")
+    mod.given = given
+    mod.settings = settings
+    mod.assume = assume
+    mod.example = example
+    mod.HealthCheck = types.SimpleNamespace(
+        too_slow=None, data_too_large=None, filter_too_much=None,
+        function_scoped_fixture=None,
+    )
+    mod.strategies = strategies
+    mod.__fallback__ = True  # lets tests detect the stand-in engine
+    sys.modules["hypothesis"] = mod
+    sys.modules["hypothesis.strategies"] = strategies

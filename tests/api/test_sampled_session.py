@@ -1,0 +1,151 @@
+"""Session(sampled=R): SHARDS-sampled profiles through the full
+prediction pipeline — accuracy within the declared error bound,
+distinct store keys (exact / binned / sampled never collide), bound
+round-trip through the disk store, and per-request rate overrides."""
+import pytest
+
+from repro.api import PredictionRequest, Session
+from repro.api.stages import MimicProfileBuilder
+from repro.hw.targets import resolve_target
+from repro.validate.store import DEFAULT_BUILDER_FP, builder_fingerprint
+from repro.workloads.polybench import make_atax
+
+REQ = PredictionRequest(
+    targets=("i7-5960X", "tpu-v5e"),
+    core_counts=(1, 2),
+    respect_core_limit=False,
+)
+
+
+@pytest.fixture(scope="module")
+def workload():
+    return make_atax(n=32)
+
+
+def test_sampled_hit_rates_within_declared_bound(workload):
+    exact = Session().predict(workload, REQ)
+    sess = Session(sampled=0.5)
+    sampled = sess.predict(workload, REQ)
+    assert len(exact) == len(sampled)
+    for pe, ps in zip(exact, sampled):
+        assert (pe.target, pe.cores) == (ps.target, ps.cores)
+        art = sess.artifacts(
+            workload, pe.cores, strategy=ps.strategy,
+            line_size=resolve_target(pe.target).levels[0].line_size,
+        )
+        bound = max(art.prd.error_bound or 0.0, art.crd.error_bound or 0.0)
+        assert bound > 0.0
+        for lvl, rate in pe.hit_rates.items():
+            assert abs(rate - ps.hit_rates[lvl]) < bound, (pe.target, lvl)
+
+
+def test_sampled_artifacts_flagged_and_bounded(workload):
+    s = Session(sampled=0.5)
+    art = s.artifacts(workload, 2)
+    assert art.sampled == 0.5
+    assert art.prd.error_bound is not None and art.prd.error_bound > 0
+    assert art.crd.error_bound is not None and art.crd.error_bound > 0
+    assert Session().artifacts(workload, 2).sampled is None
+
+
+def test_sampled_rate_one_matches_exact(workload):
+    """R == 1.0 reproduces the exact pipeline bit for bit (the sampled
+    mode's correctness anchor), with a zero declared bound."""
+    exact = Session().predict(workload, REQ)
+    full = Session(sampled=1.0)
+    res = full.predict(workload, REQ)
+    for pe, pf in zip(exact, res):
+        assert pe.hit_rates == pf.hit_rates
+    assert full.artifacts(workload, 2).prd.error_bound == 0.0
+
+
+def test_sampled_streaming_session(workload):
+    """sampled + window_size: the constant-memory windowed sampled path
+    produces the same profiles as the in-memory sampled pass."""
+    mem = Session(sampled=0.5).predict(workload, REQ)
+    win = Session(sampled=0.5, window_size=512).predict(workload, REQ)
+    for pm, pw in zip(mem, win):
+        assert pm.hit_rates == pw.hit_rates
+
+
+def test_builder_fingerprints_distinct():
+    assert (builder_fingerprint(MimicProfileBuilder(sampled=0.5))
+            == DEFAULT_BUILDER_FP + "+sampled0.5")
+    assert (builder_fingerprint(MimicProfileBuilder(sampled=0.25))
+            == DEFAULT_BUILDER_FP + "+sampled0.25")
+    # rate is part of the key: different rates never share cells
+    assert (builder_fingerprint(MimicProfileBuilder(sampled=0.5))
+            != builder_fingerprint(MimicProfileBuilder(sampled=0.25)))
+
+
+def test_sampled_param_requires_default_builder():
+    with pytest.raises(ValueError):
+        Session(profile_builder=MimicProfileBuilder(), sampled=0.5)
+    # a sampled builder passed explicitly is fine
+    Session(profile_builder=MimicProfileBuilder(sampled=0.5), sampled=0.5)
+
+
+def test_binned_and_sampled_mutually_exclusive():
+    with pytest.raises(ValueError):
+        MimicProfileBuilder(binned=True, sampled=0.5)
+    with pytest.raises(ValueError):
+        Session(binned=True, sampled=0.5)
+
+
+def test_three_modes_coexist_in_store(tmp_path, workload):
+    """Exact, binned, and sampled cells of ONE workload live under
+    distinct keys in a shared store — no cross-mode serving."""
+    Session(artifact_dir=tmp_path).predict(workload, REQ)
+    binned = Session(artifact_dir=tmp_path, binned=True)
+    binned.predict(workload, REQ)
+    assert binned.stats.store_hits == 0
+    sampled = Session(artifact_dir=tmp_path, sampled=0.5)
+    sampled.predict(workload, REQ)
+    assert sampled.stats.store_hits == 0
+    assert sampled.stats.profile_builds > 0
+
+    # warm reload: zero rebuilds, flag and error bound round-trip
+    warm = Session(artifact_dir=tmp_path, sampled=0.5)
+    res = warm.predict(workload, REQ)
+    assert warm.stats.profile_builds == 0
+    assert warm.stats.store_hits > 0
+    art = warm.artifacts(workload, 2)
+    assert art.sampled == 0.5
+    assert art.prd.error_bound is not None and art.prd.error_bound > 0
+
+    # served-from-disk results identical to freshly built ones
+    fresh = Session(sampled=0.5).predict(workload, REQ)
+    for pf, pd in zip(fresh, res):
+        assert pf.hit_rates == pd.hit_rates
+
+    # a different rate is a different key, even warm
+    other = Session(artifact_dir=tmp_path, sampled=0.25)
+    other.predict(workload, REQ)
+    assert other.stats.store_hits == 0
+    assert other.stats.profile_builds > 0
+
+
+def test_per_request_sampled_rate_override(workload):
+    """PredictionRequest.sampled_rate overrides the session mode cell
+    by cell through a cached variant builder."""
+    s = Session()
+    req = PredictionRequest(
+        targets=("i7-5960X",), core_counts=(1, 2), sampled_rate=0.5
+    )
+    s.predict(workload, req)
+    art = s.artifacts(workload, 2, sampled=0.5)
+    assert art.sampled == 0.5
+    # the exact cell is untouched: separate in-memory key
+    assert s.artifacts(workload, 2).sampled is None
+    # override on a builder without with_sampled support fails loudly
+    bad = Session()
+    bad.builder = object()
+    with pytest.raises(ValueError):
+        bad._builder_for(0.5)
+
+
+def test_request_sampled_rate_validation():
+    with pytest.raises(ValueError):
+        PredictionRequest(targets=("i7-5960X",), sampled_rate=0.0)
+    with pytest.raises(ValueError):
+        PredictionRequest(targets=("i7-5960X",), sampled_rate=1.5)

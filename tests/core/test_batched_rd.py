@@ -135,6 +135,87 @@ def test_batched_rejects_unknown_engine():
         reuse_distances_batched([np.arange(4)], engine="magic")
 
 
+# --- sharded passes: bit-identical merge for every shard count -------------
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    st.lists(st.integers(min_value=-1, max_value=60), min_size=0,
+             max_size=400),
+    st.integers(min_value=2, max_value=8),
+)
+def test_count_leq_before_sharded_bit_identical(values, shards):
+    """The chunk-decomposed dominance count is an exact integer
+    identity: bit-identical to the monolithic pass for every shard
+    count (including shards > n)."""
+    p = np.asarray(values, dtype=np.int64)
+    assert np.array_equal(count_leq_before(p, num_shards=shards),
+                          count_leq_before(p))
+
+
+@settings(max_examples=12, deadline=None)
+@given(segments_strategy, st.integers(min_value=2, max_value=5))
+def test_sharded_batched_offline_bit_identical(segments, shards):
+    """LPT-sharded offline pass merges back to the exact per-segment
+    distances of the single-shard pass."""
+    segs = [np.asarray(s, dtype=np.int64) for s in segments]
+    mono = reuse_distances_batched(segs, engine="offline", num_shards=1)
+    shd = reuse_distances_batched(segs, engine="offline",
+                                  num_shards=shards)
+    for a, b in zip(mono, shd):
+        assert np.array_equal(a, b)
+
+
+@settings(max_examples=8, deadline=None)
+@given(segments_strategy, st.integers(min_value=2, max_value=4))
+def test_sharded_batched_fenwick_bit_identical(segments, shards):
+    """The sharded split composes with the windowed fenwick engine
+    (compactions and carries are per-group, so the scatter-merge stays
+    exact)."""
+    segs = [np.asarray(s, dtype=np.int64) for s in segments]
+    mono = reuse_distances_batched(segs, engine="fenwick", window=32,
+                                   num_shards=1)
+    shd = reuse_distances_batched(segs, engine="fenwick", window=32,
+                                  num_shards=shards)
+    for a, b in zip(mono, shd):
+        assert np.array_equal(a, b)
+
+
+def test_sharded_single_oversized_segment():
+    """A lone segment can't be LPT-split; its offline dominance count
+    chunk-parallelizes instead — still bit-identical."""
+    rng = np.random.default_rng(6)
+    t = rng.integers(0, 1 << 12, size=20_000)
+    mono = reuse_distances_batched([t], engine="offline", num_shards=1)
+    shd = reuse_distances_batched([t], engine="offline", num_shards=4)
+    assert np.array_equal(mono[0], shd[0])
+    assert np.array_equal(mono[0], reuse_distances(t, method="scan"))
+
+
+def test_sharded_default_uses_local_shard_count():
+    """num_shards=None routes through repro.dist.sharding and stays
+    exact whatever the device count is."""
+    rng = np.random.default_rng(7)
+    segs = [rng.integers(0, 200, size=n) for n in (0, 37, 512, 1009)]
+    auto = reuse_distances_batched(segs)
+    for got, s in zip(auto, segs):
+        ref = (reuse_distances(s, method="scan") if s.size
+               else np.empty(0, dtype=np.int64))
+        assert np.array_equal(got, ref)
+
+
+def test_sharded_mixed_empty_segments():
+    """Empty segments are filled eagerly and never reach the shard
+    partition; ordering of results still matches the input."""
+    rng = np.random.default_rng(8)
+    segs = [np.empty(0, dtype=np.int64), rng.integers(0, 50, size=200),
+            np.empty(0, dtype=np.int64), rng.integers(0, 50, size=300)]
+    got = reuse_distances_batched(segs, engine="offline", num_shards=3)
+    assert got[0].size == 0 and got[2].size == 0
+    assert np.array_equal(got[1], reuse_distances(segs[1], method="scan"))
+    assert np.array_equal(got[3], reuse_distances(segs[3], method="scan"))
+
+
 # --- per-set routing satellite --------------------------------------------
 
 

@@ -89,6 +89,60 @@ def test_binned_check_can_be_disabled(tmp_path):
     assert all("binned_abs_dev" not in r for r in summary["records"])
 
 
+def test_sampled_profile_deviation_within_bound(tmp_path):
+    """ISSUE-9 acceptance: every sampled SDCM hit rate deviates from
+    the exact-profile prediction by less than the error bound its own
+    profile declared, and the runner records both per level cell."""
+    summary = run_validation(TINY, artifact_dir=tmp_path, processes=1)
+    sp = summary["aggregates"]["sampled_profile"]
+    assert sp["cells"] > 0
+    assert sp["rate"] == TINY.sampled_rate == 0.5
+    assert sp["max_declared_bound"] > 0.0
+    assert sp["bound_exceedances"] == 0 and sp["within_bound"]
+    for rec in summary["records"]:
+        assert set(rec["sampled_abs_dev"]) == set(rec["levels"])
+        assert set(rec["sampled_bound"]) == set(rec["levels"])
+        for lvl, dev in rec["sampled_abs_dev"].items():
+            assert dev < rec["sampled_bound"][lvl], (rec["workload"], lvl)
+
+
+def test_sampled_check_can_be_disabled(tmp_path):
+    spec = MatrixSpec(workloads=("atx",), core_counts=(1,),
+                      strategies=("round_robin",), sizes="smoke",
+                      sampled_check=False)
+    summary = run_validation(spec, artifact_dir=tmp_path, processes=1)
+    sp = summary["aggregates"]["sampled_profile"]
+    assert sp["cells"] == 0 and sp["rate"] is None
+    assert all("sampled_abs_dev" not in r for r in summary["records"])
+
+
+def test_sampling_gate_checker():
+    """check_sampling_gate: passes within bound, fails on exceedance,
+    and fails LOUDLY (not vacuously) when no sampled cells scored."""
+    from repro.validate.__main__ import check_sampling_gate
+
+    good = {"sampled_profile": {
+        "cells": 12, "rate": 0.5, "max_abs_dev": 1e-3,
+        "max_declared_bound": 5e-2, "bound_exceedances": 0,
+        "within_bound": True,
+    }}
+    ok, msg = check_sampling_gate(good)
+    assert ok and msg.startswith("OK")
+
+    bad = {"sampled_profile": {
+        "cells": 12, "rate": 0.5, "max_abs_dev": 9e-2,
+        "max_declared_bound": 5e-2, "bound_exceedances": 3,
+        "within_bound": False,
+    }}
+    ok, msg = check_sampling_gate(bad)
+    assert not ok and "3 cell(s)" in msg
+
+    ok, msg = check_sampling_gate({})
+    assert not ok and "no sampled cells" in msg
+    ok, msg = check_sampling_gate({"sampled_profile": {"cells": 0}})
+    assert not ok
+
+
 def test_second_run_zero_profile_recomputation(tmp_path):
     """THE acceptance criterion: same artifact_dir, run twice — the
     second run rebuilds no reuse profile and resimulates no baseline."""

@@ -25,6 +25,10 @@ Three checks:
    ``repro.hw.targets.ALL_TARGETS`` both directions: every table-
    carrying target documented, every documented section/row backed by
    the code values.
+6. **Sampling error bound** — ``docs/sampling.md``'s documented
+   ``SAMPLE_BOUND_DELTA`` and Bernstein closed form must match
+   ``repro.core.reuse.sampled`` (the documented formula, recomputed at
+   a reference point, must equal ``sampling_error_bound``).
 
 Run by the CI ``docs-check`` job and by ``tests/docs/test_docs.py``,
 so documentation drift fails the build instead of accumulating.
@@ -227,6 +231,76 @@ def check_runtime_timings() -> list[str]:
     return problems
 
 
+def check_sampling_bound() -> list[str]:
+    """docs/sampling.md's documented error-bound constants and closed
+    form must match repro.core.reuse.sampled."""
+    import math
+
+    doc = REPO / "docs" / "sampling.md"
+    if not doc.is_file():
+        return ["docs/sampling.md: missing (the sampled-profile error "
+                "bound must be documented)"]
+    try:
+        from repro.core.reuse import sampled
+    except ImportError as exc:
+        return [f"sampling.md: cannot import repro.core.reuse.sampled "
+                f"({exc})"]
+    text = doc.read_text()
+    problems = []
+    m = re.search(r"SAMPLE_BOUND_DELTA\s*=\s*([0-9eE.+-]+)", text)
+    if not m:
+        problems.append("sampling.md: does not document the "
+                        "SAMPLE_BOUND_DELTA value")
+    elif float(m.group(1)) != sampled.SAMPLE_BOUND_DELTA:
+        problems.append(
+            f"sampling.md: documents SAMPLE_BOUND_DELTA = {m.group(1)}, "
+            f"code has {sampled.SAMPLE_BOUND_DELTA:g}"
+        )
+    # the documented closed form must survive verbatim — and, recomputed
+    # at a reference point, must equal the implementation
+    for fragment in ("ln(2 (n+1) / SAMPLE_BOUND_DELTA",
+                     "sum_l w_l^2 / (R * n^2)",
+                     "sqrt(2 V L) + w_max L / (3 R n)",
+                     "eps * n / S_hat + |n - S_hat| / S_hat"):
+        if fragment not in text:
+            problems.append(
+                f"sampling.md: formula fragment `{fragment}` missing — "
+                "keep the documented closed form in sync with "
+                "sampling_error_bound"
+            )
+    rate, n, ssq, wmax = 0.5, 10_000, 4.0e5, 80.0
+    log_term = math.log(2.0 * (n + 1) / sampled.SAMPLE_BOUND_DELTA)
+    variance = (1.0 - rate) * ssq / (rate * n**2)
+    expected = min(1.0, math.sqrt(2.0 * variance * log_term)
+                   + wmax * log_term / (3.0 * rate * n))
+    got = sampled.sampling_error_bound(
+        rate, n, sq_line_mass=ssq, max_line_mass=wmax
+    )
+    if abs(got - expected) > 1e-12:
+        problems.append(
+            f"sampling.md: the documented closed form gives {expected!r} "
+            f"at the reference point, sampling_error_bound returns {got!r}"
+        )
+    if sampled.sampling_error_bound(1.0, n) != 0.0:
+        problems.append("sampling.md: documents bound == 0.0 at "
+                        "rate >= 1.0; the code disagrees")
+    # the Hajek ratio correction: eps * n / S_hat + |n - S_hat| / S_hat
+    kept = 3_000
+    s_hat = kept / rate
+    expected_hajek = min(1.0, (expected * n / s_hat)
+                         + abs(n - s_hat) / s_hat)
+    got_hajek = sampled.sampling_error_bound(
+        rate, n, sq_line_mass=ssq, max_line_mass=wmax, kept_refs=kept
+    )
+    if abs(got_hajek - expected_hajek) > 1e-12:
+        problems.append(
+            f"sampling.md: the documented Hajek ratio form gives "
+            f"{expected_hajek!r} at the reference point, "
+            f"sampling_error_bound returns {got_hajek!r}"
+        )
+    return problems
+
+
 def run() -> list[str]:
     sys.path.insert(0, str(REPO / "src"))
     sys.path.insert(0, str(REPO))
@@ -237,6 +311,7 @@ def run() -> list[str]:
         problems += check_commands(doc, text)
     problems += check_lint_rules()
     problems += check_runtime_timings()
+    problems += check_sampling_bound()
     return problems
 
 
