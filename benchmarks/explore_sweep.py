@@ -1,0 +1,274 @@
+"""Fused config-sweep benchmark: `sweep_grid` vs a per-config
+`Session.predict` loop (ISSUE-10 acceptance).
+
+    PYTHONPATH=src python -m benchmarks.explore_sweep [--smoke | --full]
+
+The sweep path exists because the explore agents ask one question the
+per-request grid was never shaped for: "score these THOUSANDS of
+hardware configs against one fixed profile".  The naive shape is the
+sequential oracle — every candidate becomes its own applied target and
+its own ``Session.predict`` call (warm profile caches, batched SDCM
+backend) — while the fused shape stages the whole candidate set as
+traced device arrays and runs ONE jitted SDCM+ECM dispatch per row
+shape.
+
+Gates (written to ``BENCH_explore.json``):
+
+* fused >= 20x the naive loop at 1k configs (both warm);
+* the fused best config agrees with the sequential oracle's best
+  (score tie-tolerance, since inert axes can tie exactly);
+* a subsample of fused rows is BIT-identical to `batched_hit_rates`
+  on the applied targets;
+* the Pallas inner evaluator agrees with the vmap inner to 1e-6;
+* ``--full`` additionally runs a ~10k-config sweep and asserts it
+  issued exactly ONE fused-grid invocation per distinct row shape.
+"""
+from __future__ import annotations
+
+import json
+import sys
+import time
+
+import numpy as np
+
+from benchmarks.common import REPO_ROOT, fmt_table, save_json
+from repro.api import PredictionRequest, Session
+from repro.api.batched import _sweep_akey, batched_hit_rates
+from repro.explore import FusedSweepEvaluator, SearchSpace
+from repro.workloads.polybench import make_workload
+
+TIE_RTOL = 1e-6   # fused/oracle scores agree to f32-chain accuracy
+
+
+def space_1k() -> SearchSpace:
+    """8 sets x 4 ways x 4 latencies x 4 betas x 2 cores = 1024."""
+    return SearchSpace(
+        sets=(256, 512, 1024, 2048, 4096, 8192, 16384, 32768),
+        ways=(2, 4, 8, 16),
+        latency_cy=(12.0, 20.0, 36.0, 60.0),
+        beta_cy=(1.0, 2.0, 3.0, 4.0),
+        cores=(1, 2),
+    )
+
+
+def space_10k() -> SearchSpace:
+    """16 sets x 4 ways x 5 latencies x 4 betas x 4 cores x 2 line
+    sizes = 10240 configs across 8 profile groups."""
+    sets = tuple(64 << i for i in range(16))
+    return SearchSpace(
+        sets=sets,
+        ways=(2, 4, 8, 16),
+        line_sizes=(64, 128),
+        latency_cy=(12.0, 20.0, 36.0, 48.0, 60.0),
+        beta_cy=(1.0, 2.0, 3.0, 4.0),
+        cores=(1, 2, 4, 8),
+    )
+
+
+def naive_scores(session: Session, workload, evaluator,
+                 configs) -> np.ndarray:
+    """The sequential oracle: one applied target + one
+    ``Session.predict`` call per candidate config."""
+    base = evaluator.base
+    li = evaluator.level_idx
+    out = np.empty(len(configs))
+    for ci, cfg in enumerate(configs):
+        request = PredictionRequest(
+            targets=(cfg.apply(base, li),),
+            core_counts=(cfg.cores,),
+            strategies=(cfg.strategy,),
+            counts=workload.op_counts,
+            runtime_model="ecm",
+            respect_core_limit=False,
+        )
+        (cell,) = session.predict(workload, request)
+        out[ci] = cell.t_pred_s
+    return out
+
+
+def check_bit_identity(session, workload, evaluator, configs,
+                       rates: np.ndarray, sample: int = 32) -> int:
+    """Fused rows vs `batched_hit_rates` on the applied targets."""
+    rng = np.random.default_rng(0)
+    idxs = rng.choice(len(configs), size=min(sample, len(configs)),
+                      replace=False)
+    base, li = evaluator.base, evaluator.level_idx
+    items = []
+    for ci in idxs:
+        cfg = configs[ci]
+        art = session.artifacts(
+            workload, cfg.cores, strategy=cfg.strategy, seed=0,
+            line_size=cfg.line_size,
+        )
+        items.append((cfg.apply(base, li), art))
+    names = [lvl.name for lvl in base.levels]
+    for ci, per_level in zip(idxs, batched_hit_rates(items)):
+        want = [per_level[n] for n in names]
+        assert rates[ci].tolist() == want, (
+            f"fused rates for config {configs[ci]} are not bit-identical"
+            f" to batched_hit_rates: {rates[ci].tolist()} != {want}"
+        )
+    return len(idxs)
+
+
+def row_shapes(evaluator, configs) -> set:
+    """Distinct (profile group, per-level bucket tuple) row shapes a
+    sweep dispatches — the denominator of the one-invocation claim."""
+    groups: dict[tuple, list[int]] = {}
+    for ci, cfg in enumerate(configs):
+        groups.setdefault(
+            (cfg.line_size, cfg.cores, cfg.strategy), []
+        ).append(ci)
+    shapes = set()
+    for (line, cores, strategy), idxs in groups.items():
+        geom = evaluator._geometry([configs[i] for i in idxs], line, cores)
+        for ri in range(len(idxs)):
+            shapes.add((
+                (line, cores, strategy),
+                _sweep_akey(geom.assoc[ri], geom.blocks[ri]),
+            ))
+    return shapes
+
+
+def run(quick: bool = True, write_root: bool | None = None) -> dict:
+    workload = make_workload("atx", "smoke")
+    session = Session(cache_model="batched")
+    space = space_1k()
+    configs = space.configs()
+    evaluator = FusedSweepEvaluator(workload, space, session=session)
+    assert evaluator.objective == "runtime"
+
+    # warm both sides: profile caches + jit compile caches (the naive
+    # loop reuses ONE compiled grid kernel across configs; the fused
+    # side compiles once per row shape — both paid before timing)
+    evaluator.evaluate(configs)
+    naive_scores(session, workload, evaluator, configs[:2])
+
+    warm_dispatches = evaluator.stats.fused_dispatches
+    t0 = time.perf_counter()
+    res = evaluator.evaluate(configs)
+    fused_s = time.perf_counter() - t0
+    timed_dispatches = evaluator.stats.fused_dispatches - warm_dispatches
+
+    t0 = time.perf_counter()
+    oracle = naive_scores(session, workload, evaluator, configs)
+    naive_s = time.perf_counter() - t0
+    speedup = naive_s / max(fused_s, 1e-12)
+
+    # top-1 agreement with the sequential oracle (tie-tolerant)
+    fused_best = int(np.argmin(res.scores))
+    oracle_best = float(np.min(oracle))
+    top1_ok = oracle[fused_best] <= oracle_best * (1 + TIE_RTOL)
+    assert top1_ok, (
+        f"fused best config {configs[fused_best]} scores "
+        f"{oracle[fused_best]:.6e} on the oracle, best {oracle_best:.6e}"
+    )
+    np.testing.assert_allclose(res.scores, oracle, rtol=1e-5)
+
+    bit_checked = check_bit_identity(
+        session, workload, evaluator, configs, res.rates
+    )
+
+    # Pallas inner evaluator subsample
+    pallas = FusedSweepEvaluator(workload, space, session=session,
+                                 inner="pallas")
+    sub = configs[:16]
+    pallas_res = pallas.evaluate(sub)
+    pallas_diff = float(np.max(np.abs(
+        pallas_res.rates - res.rates[: len(sub)]
+    )))
+    assert pallas_diff <= 1e-6, f"pallas inner diff {pallas_diff}"
+
+    shapes_1k = row_shapes(evaluator, configs)
+    payload = {
+        "description": (
+            "fused device-resident config sweep (sweep_grid) vs a "
+            "per-config Session.predict loop, warm caches, atx smoke"
+        ),
+        "mode": "quick" if quick else "full",
+        "configs": len(configs),
+        "fused_s": fused_s,
+        "naive_s": naive_s,
+        "speedup": speedup,
+        "fused_dispatches_1k": timed_dispatches,
+        "row_shapes_1k": len(shapes_1k),
+        "bit_identity_sample": bit_checked,
+        "pallas_max_abs_diff": pallas_diff,
+        "best": {
+            "config": configs[fused_best].to_json(),
+            "t_pred_s": float(res.scores[fused_best]),
+        },
+        "acceptance": {
+            "criterion": "fused >= 20x per-config predict loop at 1k "
+                         "configs; oracle top-1 agreement; bit-identical "
+                         "rates; pallas within 1e-6",
+            "speedup_at_1k": speedup,
+            "top1_agrees": bool(top1_ok),
+            "pass": bool(speedup >= 20.0 and top1_ok),
+        },
+    }
+
+    if not quick:
+        big_space = space_10k()
+        big = big_space.configs()
+        big_eval = FusedSweepEvaluator(workload, big_space,
+                                       session=session)
+        t0 = time.perf_counter()
+        big_res = big_eval.evaluate(big)
+        big_s = time.perf_counter() - t0
+        shapes = row_shapes(big_eval, big)
+        assert big_eval.stats.fused_dispatches == len(shapes), (
+            f"{big_eval.stats.fused_dispatches} dispatches for "
+            f"{len(shapes)} row shapes — the sweep must issue exactly "
+            "one fused-grid invocation per row shape"
+        )
+        payload["full_sweep"] = {
+            "configs": len(big),
+            "seconds": big_s,
+            "configs_per_s": len(big) / max(big_s, 1e-12),
+            "fused_dispatches": big_eval.stats.fused_dispatches,
+            "row_shapes": len(shapes),
+            "best": {
+                "config": big[int(np.argmin(big_res.scores))].to_json(),
+                "t_pred_s": float(np.min(big_res.scores)),
+            },
+        }
+
+    print(fmt_table(
+        ["configs", "fused s", "naive s", "speedup", "dispatches",
+         "row shapes"],
+        [[len(configs), f"{fused_s:.3f}", f"{naive_s:.3f}",
+          f"{speedup:.1f}x", timed_dispatches, len(shapes_1k)]],
+    ))
+    if "full_sweep" in payload:
+        fs = payload["full_sweep"]
+        print(f"full sweep: {fs['configs']} configs in "
+              f"{fs['seconds']:.2f}s ({fs['configs_per_s']:.0f}/s), "
+              f"{fs['fused_dispatches']} dispatches for "
+              f"{fs['row_shapes']} row shapes")
+
+    if write_root is None:
+        write_root = not quick
+    if write_root:
+        (REPO_ROOT / "BENCH_explore.json").write_text(
+            json.dumps(payload, indent=2)
+        )
+    save_json("BENCH_explore", payload)
+    return payload
+
+
+def main(argv=None) -> int:
+    argv = sys.argv[1:] if argv is None else argv
+    quick = "--full" not in argv
+    payload = run(quick=quick, write_root="--full" in argv or None)
+    if not payload["acceptance"]["pass"]:
+        print("ACCEPTANCE FAIL: "
+              f"speedup {payload['speedup']:.1f}x (need >= 20x) or "
+              "oracle disagreement", file=sys.stderr)
+        return 1
+    print("SMOKE-OK" if quick else "OK")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -11,6 +11,9 @@
 * roofline_table   — §Roofline (the cell table from the dry-run records)
 * service_load     — coalesced PredictionService vs naive per-request
   loop at 1/8/64 concurrent clients (BENCH_service.json)
+* explore_sweep    — fused device-resident config sweep vs per-config
+  Session.predict loop (BENCH_explore.json; standalone via
+  ``-m benchmarks.explore_sweep --smoke``)
 
 ``--smoke`` runs a minimal Session grid + the api-grid timing only —
 the CI sanity job.
@@ -58,30 +61,34 @@ def main(argv=None) -> int:
     print("=" * 72)
 
     from benchmarks import (
-        paper_hit_rates, paper_runtimes, reuse_throughput, roofline_table,
-        service_load,
+        explore_sweep, paper_hit_rates, paper_runtimes, reuse_throughput,
+        roofline_table, service_load,
     )
 
-    print("\n### [1/5] cache hit rates: SDCM prediction vs exact LRU "
+    print("\n### [1/6] cache hit rates: SDCM prediction vs exact LRU "
           "(paper Figs. 5-6)\n")
     hr = paper_hit_rates.run(quick=quick)
 
-    print("\n### [2/5] runtime prediction: Eq. 4-7 (paper Figs. 8-10)\n")
+    print("\n### [2/6] runtime prediction: Eq. 4-7 (paper Figs. 8-10)\n")
     rt = paper_runtimes.run(quick=quick)
 
-    print("\n### [3/5] reuse-profile throughput (paper §3.3.1) + "
+    print("\n### [3/6] reuse-profile throughput (paper §3.3.1) + "
           "batched-fused profile builds\n")
     reuse_throughput.run(quick=quick)
 
-    print("\n### [4/5] roofline table from dry-run records (§Roofline)\n")
+    print("\n### [4/6] roofline table from dry-run records (§Roofline)\n")
     try:
         roofline_table.run("pod")
     except Exception as e:  # records may not exist yet
         print(f"  (roofline table unavailable: {e})")
 
-    print("\n### [5/5] prediction-service throughput: coalesced vs "
+    print("\n### [5/6] prediction-service throughput: coalesced vs "
           "naive per-request loop\n")
     service_load.run(quick=quick)
+
+    print("\n### [6/6] fused config sweep vs per-config predict loop "
+          "(repro.explore)\n")
+    explore_sweep.run(quick=quick)
 
     print("\n" + "=" * 72)
     print(f"hit-rate avg |err| {hr['overall_avg_abs_err_pct']:.2f}% "

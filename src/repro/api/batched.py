@@ -23,12 +23,14 @@ sequential ``Session.predict``" guarantee.
 """
 from __future__ import annotations
 
+import dataclasses
 import functools
 
 import numpy as np
 
 import jax
 import jax.numpy as jnp
+from jax import lax
 from jax.scipy.special import logsumexp
 
 from repro.core.reuse.distance import INF_RD
@@ -180,6 +182,7 @@ def batched_hit_rates(items) -> list[dict[str, float]]:
             pr = np.pad(pr, ((0, pad), (0, 0)))
             assoc = np.pad(assoc, (0, pad), constant_values=1.0)
             blocks = np.pad(blocks, (0, pad), constant_values=2.0)
+        _record_signature(("grid", a_max, g, m))
         out = np.asarray(
             _grid_fn(a_max)(
                 jnp.asarray(d), jnp.asarray(pr),
@@ -195,3 +198,348 @@ def batched_hit_rates(items) -> list[dict[str, float]]:
     for (ci, name, _prof, _a, _b), rate in zip(rows, rates):
         out[ci][name] = float(rate)
     return out
+
+
+# --- compile accounting ------------------------------------------------------
+#
+# Every jit dispatch in this module lands on a cache key derived ONLY
+# from static structure (A_MAX bucket, padded shapes, level count,
+# chain mode) — never from batch composition or config values.  The
+# signature set below mirrors those keys so sessions can assert "a warm
+# sweep compiles nothing": `compile_count()` deltas feed
+# `SessionStats.kernel_compiles`.
+
+_COMPILED: set[tuple] = set()
+
+
+def _record_signature(sig: tuple) -> int:
+    """Record the compile-cache key a dispatch lands on; 1 if new."""
+    if sig in _COMPILED:
+        return 0
+    _COMPILED.add(sig)
+    return 1
+
+
+def compile_count() -> int:
+    """Number of distinct kernel compilations triggered so far."""
+    return len(_COMPILED)
+
+
+def compiled_signatures() -> frozenset:
+    return frozenset(_COMPILED)
+
+
+# --- fused config sweeps -----------------------------------------------------
+#
+# The batched grid above amortizes one kernel over many (workload,
+# target) cells; a config *sweep* flips the axes: ONE fixed packed
+# profile against C candidate hardware configs.  Geometry (assoc,
+# blocks), transfer betas, level latencies and core counts are traced
+# [C, L] / [C] device arrays, so the whole sweep — SDCM hit rates AND
+# the ECM runtime chain from `core/incore.py` — is one jitted call per
+# row shape with no per-config host round-trips.  C is padded to a
+# power of two and rows are grouped by their per-level A_MAX-bucket
+# tuple, keeping the compiled-kernel set bounded and each config's
+# numerics bit-identical to `batched_hit_rates` on the same row.
+
+# cap C*M elements per dispatch (f32 phit buffer <= 32 MiB); larger
+# sweeps split into pow2-sized chunks, still one dispatch per chunk.
+SWEEP_MAX_ELEMS = 1 << 23
+_SWEEP_MIN_CHUNK = 64
+
+
+@dataclasses.dataclass(frozen=True)
+class DeviceProfile:
+    """A reuse profile packed once and held device-resident.
+
+    ``d``/``p`` are pow2-padded [M] f32 device arrays with exactly the
+    bytes `pack_profiles` would produce for this profile, so sweep
+    rates match `batched_hit_rates` bit for bit.
+    """
+    d: jnp.ndarray
+    p: jnp.ndarray
+    m: int
+    total: int
+
+
+def pack_profile_device(prof) -> DeviceProfile:
+    d, p = pack_profiles([prof])
+    return DeviceProfile(
+        d=jnp.asarray(d[0]), p=jnp.asarray(p[0]),
+        m=d.shape[1], total=int(prof.total),
+    )
+
+
+@dataclasses.dataclass(frozen=True)
+class SweepGeometry:
+    """Host-staged config axes for one sweep row group.
+
+    All arrays are f32; [C, L] for per-level axes, [C] for cores.
+    ``trans_beta[:, i]`` is the transfer beta of the boundary INTO
+    level i+1 (RAM for the last column) — the `core/incore.py`
+    convention.  ``delta`` is the per-level access latency used by the
+    latency-mode chain.
+    """
+    assoc: np.ndarray
+    blocks: np.ndarray
+    trans_beta: np.ndarray
+    delta: np.ndarray
+    cores: np.ndarray
+
+    def __post_init__(self):
+        c, n = self.assoc.shape
+        for name in ("blocks", "trans_beta", "delta"):
+            if getattr(self, name).shape != (c, n):
+                raise ValueError(f"geometry field {name} shape mismatch")
+        if self.cores.shape != (c,):
+            raise ValueError("geometry cores shape mismatch")
+
+
+@dataclasses.dataclass(frozen=True)
+class SweepResult:
+    rates: np.ndarray            # [C, L] float64
+    t_pred_s: np.ndarray | None  # [C] float64 (None without counts)
+    dispatches: int              # fused-grid invocations issued
+    compiles: int                # NEW kernel compilations triggered
+
+
+def _rates_body(prd_d, prd_p, crd_d, crd_p, assoc, blocks,
+                a_key: tuple, shared_idx: int):
+    """[C, L] hit rates; level l uses the PRD below the shared level
+    and the CRD at/above it, matching `AnalyticalSDCM`."""
+    c = assoc.shape[0]
+    cols = []
+    for lv in range(len(a_key)):
+        d, p = (prd_d, prd_p) if lv < shared_idx else (crd_d, crd_p)
+        d2 = jnp.broadcast_to(d, (c, d.shape[0]))
+        phit = jax.vmap(_phit_row, in_axes=(0, 0, 0, None))(
+            d2, assoc[:, lv], blocks[:, lv], a_key[lv]
+        )
+        cols.append(
+            jnp.sum(jnp.broadcast_to(p, d2.shape) * phit, axis=-1)
+        )
+    return jnp.stack(cols, axis=-1)
+
+
+def _chain_body(rates, trans_beta, delta, cores,
+                comp_cy, lsu_cy, mem_ops, ram_delta, cycle_s,
+                shared_idx: int, mode: str):
+    """ECM runtime chain on device — the `core/incore.py` math
+    vectorized over the config axis.
+
+    Per-core counts are the 1/cores share; the chip-wide saturation
+    term runs on UNDIVIDED counts over the boundaries at/above the
+    shared level, exactly as `ecm_cycles` does on host.
+    """
+    n_levels = rates.shape[1]
+    reach = lax.cummin(jnp.clip(1.0 - rates, 0.0, 1.0), axis=1)
+    share = 1.0 / jnp.maximum(cores, 1.0)
+    full_transfers = mem_ops * reach * trans_beta        # [C, L] undivided
+    if mode == "latency":
+        acc = jnp.broadcast_to(ram_delta, rates.shape[:1])
+        for lv in reversed(range(n_levels)):
+            pl = rates[:, lv]
+            acc = pl * delta[:, lv] + (1.0 - pl) * acc
+        core_cy = comp_cy * share + mem_ops * share * acc
+    else:
+        data = lsu_cy * share + share * jnp.sum(full_transfers, axis=-1)
+        core_cy = jnp.maximum(comp_cy * share, data)
+    start = max(shared_idx - 1, 0)
+    sat = jnp.sum(full_transfers[:, start:], axis=-1)
+    return jnp.maximum(core_cy, sat) * cycle_s
+
+
+@functools.lru_cache(maxsize=None)
+def _sweep_fn(a_key: tuple, shared_idx: int, mode: str,
+              with_runtime: bool):
+    @jax.jit
+    def run(prd_d, prd_p, crd_d, crd_p, assoc, blocks, trans_beta,
+            delta, cores, comp_cy, lsu_cy, mem_ops, ram_delta, cycle_s):
+        rates = _rates_body(
+            prd_d, prd_p, crd_d, crd_p, assoc, blocks, a_key, shared_idx
+        )
+        if not with_runtime:
+            return rates
+        t = _chain_body(
+            rates, trans_beta, delta, cores,
+            comp_cy, lsu_cy, mem_ops, ram_delta, cycle_s,
+            shared_idx, mode,
+        )
+        return rates, t
+
+    return run
+
+
+@functools.lru_cache(maxsize=None)
+def _chain_fn(n_levels: int, shared_idx: int, mode: str):
+    """Runtime chain alone — consumes externally computed hit rates
+    (the Pallas inner evaluator path)."""
+    del n_levels  # part of the cache key; shapes carry it at trace time
+
+    @jax.jit
+    def run(rates, trans_beta, delta, cores,
+            comp_cy, lsu_cy, mem_ops, ram_delta, cycle_s):
+        return _chain_body(
+            rates, trans_beta, delta, cores,
+            comp_cy, lsu_cy, mem_ops, ram_delta, cycle_s,
+            shared_idx, mode,
+        )
+
+    return run
+
+
+def _sweep_akey(assoc_row: np.ndarray, blocks_row: np.ndarray) -> tuple:
+    """Per-level A_MAX bucket tuple for one config — `_row_shape_key`
+    applied level-wise, so each (config, level) row compiles and
+    evaluates exactly as it would in `batched_hit_rates`."""
+    return tuple(
+        _bucket(int(a)) if a < b else _A_BUCKETS[0]
+        for a, b in zip(assoc_row, blocks_row)
+    )
+
+
+def _pad_rows(arr: np.ndarray, pad: int, value: float) -> np.ndarray:
+    if pad == 0:
+        return arr
+    width = ((0, pad),) + ((0, 0),) * (arr.ndim - 1)
+    return np.pad(arr, width, constant_values=value)
+
+
+def _pallas_rates(prd: DeviceProfile, crd: DeviceProfile,
+                  geom: SweepGeometry, shared_idx: int,
+                  interpret: bool) -> tuple[np.ndarray, int, int]:
+    """Inner evaluator on the `repro.kernels.sdcm` Pallas kernel.
+
+    Geometry is static per Pallas compile, so configs are grouped by
+    distinct (assoc, blocks) per level — one kernel call per geometry.
+    A TPU-oriented path (interpret mode off-TPU); the vmap path remains
+    the default.  Returns (rates, dispatches, new compiles).
+    """
+    from repro.kernels.sdcm import sdcm_hit_rate
+
+    c, n_levels = geom.assoc.shape
+    rates = np.zeros((c, n_levels), dtype=np.float64)
+    dispatches = 0
+    compiles = 0
+    for lv in range(n_levels):
+        prof = prd if lv < shared_idx else crd
+        pairs: dict[tuple[int, int], list[int]] = {}
+        for ci in range(c):
+            key = (int(geom.assoc[ci, lv]), int(geom.blocks[ci, lv]))
+            pairs.setdefault(key, []).append(ci)
+        for (a, b), idxs in pairs.items():
+            compiles += _record_signature(
+                ("pallas-sdcm", a, b, prof.m, interpret)
+            )
+            r = float(
+                sdcm_hit_rate(
+                    prof.d, prof.p, assoc=a, blocks=b, interpret=interpret
+                )
+            )
+            dispatches += 1
+            rates[np.asarray(idxs), lv] = r
+    return rates, dispatches, compiles
+
+
+def sweep_grid(prd: DeviceProfile, crd: DeviceProfile,
+               geom: SweepGeometry, *, shared_idx: int,
+               counts=None, timings=None, cycle_s: float = 1.0,
+               ram_delta: float = 0.0, mode: str = "throughput",
+               inner: str = "vmap",
+               interpret: bool | None = None) -> SweepResult:
+    """Evaluate C hardware configs against one packed profile pair.
+
+    Returns per-config [C, L] hit rates, plus per-config predicted
+    runtime seconds when ``counts`` (an `OpCounts`) and ``timings``
+    (an `InCoreTimings`) are given — the full SDCM + ECM chain fused
+    into one jitted dispatch per row shape.  Configs are grouped by
+    their per-level A_MAX-bucket tuple and each group's C is padded to
+    a power of two (chunked at `SWEEP_MAX_ELEMS`), so the compiled set
+    stays bounded and every config's hit-rate bits are independent of
+    which other configs share the sweep.
+    """
+    if inner not in ("vmap", "pallas"):
+        raise ValueError(f"unknown sweep inner evaluator: {inner!r}")
+    c, n_levels = geom.assoc.shape
+    with_runtime = counts is not None
+    if with_runtime and timings is None:
+        raise ValueError("sweep_grid needs timings when counts are given")
+
+    if with_runtime:
+        from repro.core.incore import t_comp_cy, t_lsu_cy
+
+        comp_cy = float(t_comp_cy(timings, counts, mode))
+        lsu_cy = float(t_lsu_cy(timings, counts))
+        mem_ops = float(counts.mem_ops)
+    else:
+        comp_cy = lsu_cy = mem_ops = 0.0
+
+    rates = np.zeros((c, n_levels), dtype=np.float64)
+    t_pred = np.zeros(c, dtype=np.float64) if with_runtime else None
+    dispatches = 0
+    compiles = 0
+
+    if inner == "pallas":
+        if interpret is None:
+            interpret = jax.default_backend() != "tpu"
+        rates, dispatches, compiles = _pallas_rates(
+            prd, crd, geom, shared_idx, interpret
+        )
+        if with_runtime:
+            sig = ("sweep-chain", n_levels, shared_idx, mode, _pow2(c))
+            compiles += _record_signature(sig)
+            pad = _pow2(c) - c
+            t = _chain_fn(n_levels, shared_idx, mode)(
+                jnp.asarray(
+                    _pad_rows(rates.astype(np.float32), pad, 1.0)
+                ),
+                jnp.asarray(_pad_rows(geom.trans_beta, pad, 0.0)),
+                jnp.asarray(_pad_rows(geom.delta, pad, 0.0)),
+                jnp.asarray(_pad_rows(geom.cores, pad, 1.0)),
+                comp_cy, lsu_cy, mem_ops, ram_delta, cycle_s,
+            )
+            t_pred[:] = np.asarray(t, dtype=np.float64)[:c]
+            dispatches += 1
+        return SweepResult(rates, t_pred, dispatches, compiles)
+
+    # group configs by their per-level bucket tuple (static per compile)
+    groups: dict[tuple, list[int]] = {}
+    for ci in range(c):
+        groups.setdefault(
+            _sweep_akey(geom.assoc[ci], geom.blocks[ci]), []
+        ).append(ci)
+
+    max_m = max(prd.m, crd.m)
+    chunk_cap = max(_SWEEP_MIN_CHUNK, _pow2(SWEEP_MAX_ELEMS // max_m) // 2)
+    fn_args = (prd.d, prd.p, crd.d, crd.p)
+    for a_key, idx_list in groups.items():
+        fn = _sweep_fn(a_key, shared_idx, mode, with_runtime)
+        for lo in range(0, len(idx_list), chunk_cap):
+            idxs = np.asarray(idx_list[lo:lo + chunk_cap])
+            g = _pow2(len(idxs))
+            pad = g - len(idxs)
+            sig = ("sweep", a_key, shared_idx, mode, with_runtime,
+                   g, prd.m, crd.m)
+            compiles += _record_signature(sig)
+            out = fn(
+                *fn_args,
+                jnp.asarray(_pad_rows(geom.assoc[idxs], pad, 1.0)),
+                jnp.asarray(_pad_rows(geom.blocks[idxs], pad, 2.0)),
+                jnp.asarray(_pad_rows(geom.trans_beta[idxs], pad, 0.0)),
+                jnp.asarray(_pad_rows(geom.delta[idxs], pad, 0.0)),
+                jnp.asarray(_pad_rows(geom.cores[idxs], pad, 1.0)),
+                comp_cy, lsu_cy, mem_ops, ram_delta, cycle_s,
+            )
+            dispatches += 1
+            if with_runtime:
+                r, t = out
+                t_pred[idxs] = np.asarray(t, dtype=np.float64)[:len(idxs)]
+            else:
+                r = out
+            rates[idxs] = np.asarray(r, dtype=np.float64)[:len(idxs)]
+
+    if prd.total == 0:
+        rates[:, :shared_idx] = 0.0
+    if crd.total == 0:
+        rates[:, shared_idx:] = 0.0
+    return SweepResult(rates, t_pred, dispatches, compiles)

@@ -64,6 +64,10 @@ class SessionStats:
     streaming_builds: int = 0
     store_hits: int = 0     # profiles served from the disk store
     store_puts: int = 0     # freshly built profiles written back
+    kernel_compiles: int = 0  # NEW jit compile-cache entries this session
+    # triggered in `repro.api.batched` (grid + config-sweep kernels).
+    # A warm session re-running an identical sweep must leave this
+    # unchanged: every dispatch lands on an existing row-shape key.
 
     def reset(self) -> None:
         for f in dataclasses.fields(self):
@@ -132,6 +136,9 @@ class Session:
         self.builder = profile_builder
         self._sampled_builders: dict[float, object] = {}
         self.window_size = window_size
+        if isinstance(cache_model, str):
+            # shorthand for the analytical backends ("batched"/"numpy")
+            cache_model = AnalyticalSDCM(backend=cache_model)
         self.cache_model = cache_model or AnalyticalSDCM()
         self.runtime_model = runtime_model  # None -> per-target default
         self.cache_enabled = cache
@@ -546,12 +553,18 @@ class Session:
             plans.append((tid, request, cells, arts))
             flat.extend((cell.target, art) for cell, art in zip(cells, arts))
 
+        from repro.api import batched
+
+        compiled_before = batched.compile_count()
         if hasattr(self.cache_model, "hit_rates_grid"):
             rate_dicts = self.cache_model.hit_rates_grid(flat)
         else:
             rate_dicts = [
                 self.cache_model.hit_rates(t, a) for t, a in flat
             ]
+        self.stats.kernel_compiles += (
+            batched.compile_count() - compiled_before
+        )
 
         out: list[PredictionSet] = []
         offset = 0

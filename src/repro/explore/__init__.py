@@ -1,0 +1,30 @@
+"""`repro.explore` — design-space autotuning over the fused SDCM+ECM
+sweep (`repro.api.batched.sweep_grid`).
+
+    from repro.explore import SearchSpace, run_explore
+    result = run_explore(workload, SearchSpace(sets=(1024, 4096)),
+                         agent="hillclimb", budget=256)
+
+CLI: ``python -m repro.explore --workload polybench/atax ...``
+Service: ``POST /explore`` (see `repro.service`).
+"""
+from .agents import AGENTS, GAAgent, HillClimbAgent, RandomAgent, make_agent
+from .engine import OBJECTIVES, FusedSweepEvaluator, SweepStats
+from .runner import explore_key, run_explore
+from .space import INTERLEAVE_STRATEGIES, CandidateConfig, SearchSpace
+
+__all__ = [
+    "AGENTS",
+    "CandidateConfig",
+    "FusedSweepEvaluator",
+    "GAAgent",
+    "HillClimbAgent",
+    "INTERLEAVE_STRATEGIES",
+    "OBJECTIVES",
+    "RandomAgent",
+    "SearchSpace",
+    "SweepStats",
+    "explore_key",
+    "make_agent",
+    "run_explore",
+]

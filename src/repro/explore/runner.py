@@ -1,0 +1,114 @@
+"""Top-level explore driver: search + trajectory persistence.
+
+`run_explore` keys each (workload fingerprint, space, agent, budget,
+seed, objective) search by a stable hash and persists the full result —
+best config, top-k table, round-by-round trajectory, sweep stats —
+under the ArtifactStore's ``explore`` kind.  A warm re-run with the
+same key returns the stored result with ZERO recomputation: no profile
+builds, no kernel dispatches, no agent rounds.
+"""
+from __future__ import annotations
+
+import hashlib
+import json
+
+import numpy as np
+
+from repro.api.session import Session
+
+from .agents import ScoreCache, Trajectory, make_agent
+from .engine import FusedSweepEvaluator
+from .space import CandidateConfig, SearchSpace
+
+TOP_K = 10
+
+
+def explore_key(fingerprint: str, space: SearchSpace, agent: str,
+                agent_params: dict, budget: int, seed: int,
+                objective: str, mode: str, inner: str) -> str:
+    """Stable store key over everything that determines the result."""
+    blob = json.dumps({
+        "fingerprint": fingerprint,
+        "space": space.to_json(),
+        "agent": agent,
+        "agent_params": agent_params,
+        "budget": budget,
+        "seed": seed,
+        "objective": objective,
+        "mode": mode,
+        "inner": inner,
+    }, sort_keys=True)
+    return hashlib.sha1(blob.encode()).hexdigest()[:20]
+
+
+def run_explore(source, space: SearchSpace, *, agent: str = "hillclimb",
+                agent_params: dict | None = None, budget: int = 128,
+                seed: int = 0, session=None, counts=None,
+                mode: str = "throughput", objective: str | None = None,
+                inner: str = "vmap", workload: str | None = None,
+                refresh: bool = False) -> dict:
+    """Search ``space`` for the best config of ``source``.
+
+    Returns a JSON-serializable result dict; ``result["cached"]`` says
+    whether it came straight from the ArtifactStore.
+    """
+    if session is None:
+        session = Session(cache_model="batched")
+    agent_obj = make_agent(agent, agent_params)
+    fingerprint = session.identify(source)
+    evaluator = FusedSweepEvaluator(
+        source, space, session=session, counts=counts, mode=mode,
+        objective=objective, inner=inner, seed=seed,
+    )
+    key = explore_key(
+        fingerprint, space, agent_obj.name, agent_obj.params(),
+        budget, seed, evaluator.objective, mode, inner,
+    )
+    store = session.store
+    if store is not None and not refresh:
+        cached = store.get_json("explore", key)
+        if cached is not None:
+            return {**cached, "cached": True}
+
+    trajectory = Trajectory(agent=agent_obj.name, seed=seed)
+    cache = ScoreCache(evaluator.scores, budget, trajectory)
+    agent_obj.search(space, cache, np.random.default_rng(seed))
+
+    best = trajectory.best_config
+    if best is None:
+        raise RuntimeError("explore finished without scoring any config")
+    detail = evaluator.evaluate([best])
+    level_names = [lvl.name for lvl in evaluator.base.levels]
+    result = {
+        "key": key,
+        "workload": workload or getattr(source, "name", type(source).__name__),
+        "fingerprint": fingerprint,
+        "space": space.to_json(),
+        "space_size": space.size,
+        "agent": agent_obj.name,
+        "agent_params": agent_obj.params(),
+        "budget": budget,
+        "seed": seed,
+        "objective": evaluator.objective,
+        "mode": mode,
+        "inner": inner,
+        "best": {
+            "config": best.to_json(),
+            "score": trajectory.best_score,
+            "hit_rates": dict(zip(level_names, detail.rates[0].tolist())),
+            "t_pred_s": (float(detail.t_pred_s[0])
+                         if detail.t_pred_s is not None else None),
+        },
+        "top": [
+            {"config": CandidateConfig(*k).to_json(), "score": s}
+            for k, s in cache.top(TOP_K)
+        ],
+        "trajectory": trajectory.to_json(),
+        "stats": evaluator.stats.to_json(),
+    }
+    if store is not None:
+        store.put_json("explore", key, result)
+    return {**result, "cached": False}
+
+
+__all__ = ["TOP_K", "explore_key", "run_explore"]

@@ -72,6 +72,36 @@ class ServiceClient:
             payload["window_size"] = window_size
         return self._call("/predict", payload)
 
+    def explore(self, workload: str, *, sizes: str | None = None,
+                space: dict | None = None, agent: str = "hillclimb",
+                budget: int = 256, seed: int = 0,
+                objective: str | None = None, mode: str | None = None,
+                inner: str | None = None, refresh: bool = False) -> dict:
+        """Run a config-space search on the server's explore lane.
+
+        Blocks until the search completes (searches are budget-bounded;
+        size ``timeout`` accordingly) and returns the full
+        ``run_explore`` result dict."""
+        payload: dict = {
+            "workload": workload,
+            "agent": agent,
+            "budget": budget,
+            "seed": seed,
+        }
+        if sizes is not None:
+            payload["sizes"] = sizes
+        if space is not None:
+            payload["space"] = space
+        if objective is not None:
+            payload["objective"] = objective
+        if mode is not None:
+            payload["mode"] = mode
+        if inner is not None:
+            payload["inner"] = inner
+        if refresh:
+            payload["refresh"] = True
+        return self._call("/explore", payload)
+
     def stats(self) -> dict:
         return self._call("/stats")
 

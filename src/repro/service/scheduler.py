@@ -219,3 +219,139 @@ class MicroBatcher:
                 # futures and keep going
                 for pending in batch:
                     resolve_future(pending.future, error=exc)
+
+
+@dataclasses.dataclass
+class PoolStats:
+    """Observable worker-pool behaviour (asserted by tests)."""
+
+    submitted: int = 0          # accepted into the pending queue
+    completed: int = 0          # futures resolved with a result
+    failed: int = 0             # futures resolved with an exception
+    cancelled: int = 0          # cancelled while pending
+    shed: int = 0               # rejected, pending queue full
+    active: int = 0             # jobs executing right now
+
+
+class BoundedWorkerPool:
+    """Fixed worker threads + a bounded pending queue for LONG jobs.
+
+    The microbatcher above turns many small requests into batch size;
+    this pool is its counterpart for requests that are individually
+    expensive (config-space sweeps via ``POST /explore``): a separate,
+    deliberately small lane so a multi-second search can never occupy
+    the predict worker or its queue.  Backpressure is the same
+    load-shedding contract — ``try_submit`` returns ``None`` when
+    ``max_pending`` jobs are already waiting, and the HTTP layer maps
+    that to 503 exactly like a full predict queue.
+    """
+
+    def __init__(self, *, max_workers: int = 1, max_pending: int = 2,
+                 name: str = "repro-service-pool"):
+        if max_workers < 1:
+            raise ValueError("max_workers must be >= 1")
+        if max_pending < 1:
+            raise ValueError("max_pending must be >= 1")
+        self.max_workers = max_workers
+        self.max_pending = max_pending
+        self._name = name
+        self._queue: queue.Queue = queue.Queue(maxsize=max_pending)
+        self._threads: list[threading.Thread] = []
+        self._stopped = False
+        self.stats = PoolStats()
+        # one lock serializes submit/stop/stat flips (MicroBatcher's
+        # accepted-before-sentinel draining argument applies unchanged)
+        self._state_lock = threading.Lock()
+
+    @property
+    def depth(self) -> int:
+        return self._queue.qsize()
+
+    def start(self) -> None:
+        if self._threads:
+            return
+        with self._state_lock:
+            self._stopped = False
+        for i in range(self.max_workers):
+            t = threading.Thread(
+                target=self._run, name=f"{self._name}-{i}", daemon=True
+            )
+            t.start()
+            self._threads.append(t)
+
+    def stop(self) -> None:
+        """Drain accepted jobs, then stop every worker.  Jobs still
+        pending after the join (stop before start) resolve with a
+        RuntimeError rather than stranding their waiters."""
+        with self._state_lock:
+            self._stopped = True
+        threads, self._threads = self._threads, []
+        for _ in threads:
+            self._queue.put(_STOP)
+        for t in threads:
+            t.join()
+        error = RuntimeError("worker pool stopped before this job ran")
+        dropped = 0
+        while True:
+            try:
+                item = self._queue.get_nowait()
+            except queue.Empty:
+                break
+            if item is _STOP:
+                continue
+            _fn, future = item
+            if resolve_future(future, error=error):
+                dropped += 1
+        with self._state_lock:
+            self.stats.failed += dropped
+
+    def try_submit(self, fn) -> Future | None:
+        """Enqueue ``fn`` (a zero-arg callable); ``None`` means the
+        pending lane is full and the caller sheds.  Raises
+        ``RuntimeError`` once stopped."""
+        future: Future = Future()
+        with self._state_lock:
+            if self._stopped:
+                raise RuntimeError("BoundedWorkerPool is stopped")
+            try:
+                self._queue.put_nowait((fn, future))
+            except queue.Full:
+                self.stats.shed += 1
+                return None
+            self.stats.submitted += 1
+        return future
+
+    def stats_dict(self) -> dict:
+        with self._state_lock:
+            out = dataclasses.asdict(self.stats)
+        out["depth"] = self.depth
+        out["max_workers"] = self.max_workers
+        out["max_pending"] = self.max_pending
+        return out
+
+    def _run(self) -> None:
+        while True:
+            item = self._queue.get()
+            if item is _STOP:
+                return
+            fn, future = item
+            # mark running BEFORE executing: a cancel can only win while
+            # the job is still pending, never mid-flight
+            if not future.set_running_or_notify_cancel():
+                with self._state_lock:
+                    self.stats.cancelled += 1
+                continue
+            with self._state_lock:
+                self.stats.active += 1
+            try:
+                result = fn()
+            except BaseException as exc:  # noqa: BLE001 — forwarded
+                future.set_exception(exc)
+                with self._state_lock:
+                    self.stats.active -= 1
+                    self.stats.failed += 1
+            else:
+                future.set_result(result)
+                with self._state_lock:
+                    self.stats.active -= 1
+                    self.stats.completed += 1

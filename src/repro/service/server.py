@@ -11,8 +11,16 @@ Endpoints (JSON in/out):
                      "targets": [...], "core_counts": [1, 4, 8],
                      "strategies": ["round_robin"], "runtime": true,
                      "runtime_model": "auto" | "eq" | "ecm" | "roofline"}
+    POST /explore   {"workload": "polybench/atx", "sizes": "smoke",
+                     "space": {"sets": [...], "ways": [...]},
+                     "agent": "hillclimb", "budget": 256, "seed": 0}
     GET  /stats     service + session + store counters
     GET  /healthz   liveness
+
+``/explore`` runs on the service's bounded explore pool (its own
+worker lane), so a multi-second config sweep can never starve
+``/predict`` microbatches; the handler thread blocks on the job's
+future and returns the full ``run_explore`` result dict.
 
 Error mapping: bad payloads -> 400, queue-full load shed -> 503 (with
 ``Retry-After``), anything else -> 500.  Workloads are resolved by
@@ -130,6 +138,9 @@ class _Handler(BaseHTTPRequestHandler):
             self._reply(404, {"error": f"no such endpoint: {self.path}"})
 
     def do_POST(self):
+        if self.path == "/explore":
+            self._do_explore()
+            return
         if self.path != "/predict":
             self._reply(404, {"error": f"no such endpoint: {self.path}"})
             return
@@ -169,6 +180,47 @@ class _Handler(BaseHTTPRequestHandler):
             "predictions": resp.result.to_records(),
             "timing": asdict(resp.timing),
         })
+
+    def _do_explore(self):
+        from repro.explore import SearchSpace
+
+        try:
+            length = int(self.headers.get("Content-Length", 0))
+            payload = json.loads(self.rfile.read(length) or b"{}")
+            requested = payload["workload"]
+            sizes = payload.get("sizes")
+            resolver = self.server.resolver  # type: ignore[attr-defined]
+            workload = resolver.get(requested, sizes)
+            name = getattr(workload, "workload_name", requested)
+            space = SearchSpace.from_json(payload.get("space") or {})
+            kwargs = dict(
+                agent=payload.get("agent", "hillclimb"),
+                budget=int(payload.get("budget", 256)),
+                seed=int(payload.get("seed", 0)),
+                mode=payload.get("mode", "throughput"),
+                objective=payload.get("objective"),
+                inner=payload.get("inner", "vmap"),
+                refresh=bool(payload.get("refresh", False)),
+            )
+        except (KeyError, TypeError, ValueError) as exc:
+            self._reply(400, {"error": str(exc)})
+            return
+        try:
+            # unlike /predict this blocks the handler thread for the
+            # whole search — the explore lane bounds how many do so
+            result = self.service.explore(
+                workload, space, workload=name, **kwargs
+            )
+        except ServiceOverloadedError as exc:
+            self._reply(503, {"error": str(exc)}, {"Retry-After": "5"})
+            return
+        except ValueError as exc:
+            self._reply(400, {"error": str(exc)})
+            return
+        except Exception as exc:  # noqa: BLE001 — surfaced to the client
+            self._reply(500, {"error": f"{type(exc).__name__}: {exc}"})
+            return
+        self._reply(200, result)
 
 
 class PredictionServer(ThreadingHTTPServer):

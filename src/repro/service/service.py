@@ -38,6 +38,7 @@ from typing import ClassVar
 from repro.api import AnalyticalSDCM, PredictionRequest, Session
 from repro.api.results import PredictionSet
 from repro.service.scheduler import (
+    BoundedWorkerPool,
     MicroBatcher,
     PendingRequest,
     coalesce,
@@ -63,6 +64,11 @@ class ServiceConfig:
     max_wait_ms: float = 5.0    # flush window past the first item
     queue_size: int = 256       # bounded queue; beyond this, shed
     artifact_dir: str | None = None  # shared disk store (optional)
+    # the /explore lane: long-running sweeps run on their own bounded
+    # pool so a search can never starve /predict microbatches
+    explore_workers: int = 1    # concurrent explore jobs
+    explore_pending: int = 2    # queued explore jobs beyond that; then shed
+    explore_budget_cap: int = 4096  # max unique configs per explore request
 
     @property
     def max_wait_s(self) -> float:
@@ -159,6 +165,7 @@ class PredictionService:
                 artifact_dir=artifact_dir,
             )
         self.session = session
+        self._artifact_dir = artifact_dir
         self.stats = ServiceStats()
         self._stats_lock = threading.Lock()
         self._batcher = MicroBatcher(
@@ -168,6 +175,16 @@ class PredictionService:
             queue_size=self.config.queue_size,
             on_discard=self._discard,
         )
+        # explore jobs get their own small lane: separate worker
+        # thread(s), separate bounded queue — a multi-second sweep can
+        # never occupy the predict worker, and each job runs on a
+        # private Session (sharing the disk store), so the predict
+        # Session stays single-threaded
+        self._explore_pool = BoundedWorkerPool(
+            max_workers=self.config.explore_workers,
+            max_pending=self.config.explore_pending,
+            name="repro-service-explore",
+        )
         self._running = False
 
     # --- lifecycle ---------------------------------------------------------
@@ -175,6 +192,7 @@ class PredictionService:
     def start(self) -> "PredictionService":
         self._running = True
         self._batcher.start()
+        self._explore_pool.start()
         return self
 
     def stop(self) -> None:
@@ -187,6 +205,7 @@ class PredictionService:
             return
         self._running = False
         self._batcher.stop()
+        self._explore_pool.stop()
 
     def _discard(self, leftovers: list[PendingRequest]) -> None:
         error = RuntimeError(
@@ -255,11 +274,76 @@ class PredictionService:
         """Blocking convenience: ``submit(...).result(timeout)``."""
         return self.submit(source, request, key=key).result(timeout)
 
+    # --- explore lane ------------------------------------------------------
+
+    def submit_explore(self, source, space, *, agent: str = "hillclimb",
+                       budget: int = 256, seed: int = 0,
+                       mode: str = "throughput",
+                       objective: str | None = None,
+                       inner: str = "vmap",
+                       workload: str | None = None,
+                       refresh: bool = False) -> Future:
+        """Enqueue a config-space search (``repro.explore``) on the
+        bounded explore pool; the Future resolves to the
+        ``run_explore`` result dict.
+
+        Validation (unknown agent, empty space, over-cap budget) raises
+        ``ValueError`` here — before queueing — and a full explore lane
+        raises ``ServiceOverloadedError``, exactly like ``submit``.
+        Each job builds a private Session over the service's artifact
+        dir: profiles and trajectories persist in the shared store, but
+        the predict Session is never touched off its worker thread.
+        """
+        from repro.explore import make_agent, run_explore
+
+        if not self._running:
+            raise RuntimeError("PredictionService is not running "
+                               "(use `with service:` or call start())")
+        cap = self.config.explore_budget_cap
+        if budget < 1 or budget > cap:
+            raise ValueError(
+                f"explore budget {budget} outside [1, {cap}] "
+                "(ServiceConfig.explore_budget_cap)"
+            )
+        make_agent(agent)  # unknown agent -> ValueError before queueing
+        artifact_dir = self._artifact_dir
+
+        def job() -> dict:
+            session = Session(
+                cache_model=AnalyticalSDCM(backend="batched"),
+                artifact_dir=artifact_dir,
+            )
+            return run_explore(
+                source, space, agent=agent, budget=budget, seed=seed,
+                session=session, mode=mode, objective=objective,
+                inner=inner, workload=workload, refresh=refresh,
+            )
+
+        try:
+            future = self._explore_pool.try_submit(job)
+        except RuntimeError:
+            raise RuntimeError("PredictionService is not running "
+                               "(use `with service:` or call start())")
+        if future is None:
+            raise ServiceOverloadedError(
+                f"explore lane is full ({self._explore_pool.depth} "
+                f"pending, limit {self.config.explore_pending}); request "
+                "shed — retry with backoff or raise "
+                "ServiceConfig.explore_pending"
+            )
+        return future
+
+    def explore(self, source, space, *, timeout: float | None = None,
+                **kwargs) -> dict:
+        """Blocking convenience: ``submit_explore(...).result()``."""
+        return self.submit_explore(source, space, **kwargs).result(timeout)
+
     def snapshot(self) -> dict:
         """Service + Session counters in one json-serializable dict."""
         with self._stats_lock:
             out = {"service": self.stats.to_dict()}
         out["session"] = dataclasses.asdict(self.session.stats)
+        out["explore"] = self._explore_pool.stats_dict()
         store = self.session.store
         if store is not None:
             out["store"] = dataclasses.asdict(store.stats)

@@ -55,9 +55,13 @@ import numpy as np
 # ``crd_error_bound``, and sampled builders stamp their keys with
 # ``+sampled{rate}`` — exact, binned, and sampled cells of one
 # workload can never be confused in a shared store.
+# v4 (unversioned addition): the ``explore`` kind persists
+# config-sweep search results (repro.explore) — best config, top-k,
+# round-by-round trajectory — keyed by explore_key(); purely additive,
+# so existing stores stay readable.
 STORE_VERSION = 4
 
-_KINDS = ("profile", "exact", "validation", "workload")
+_KINDS = ("profile", "exact", "validation", "workload", "explore")
 
 
 def atomic_write(target: Path, write_fn) -> None:

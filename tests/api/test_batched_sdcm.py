@@ -129,3 +129,93 @@ class _FakeArt:
         self.prd = prof
         self.crd = prof
         self.cores = 1
+
+
+# --- compile accounting (SessionStats.kernel_compiles) -----------------------
+
+
+def test_warm_session_compiles_each_row_shape_exactly_once():
+    """Three identical sweeps through one session: the first pays for
+    exactly the row-shape signatures not yet in the process-wide
+    compile cache; sweeps two and three compile NOTHING."""
+    from repro.api.batched import (
+        _pow2,
+        _row_shape_key,
+        compiled_signatures,
+    )
+    from repro.api.stages import shared_level_index
+
+    trace = small_trace(iters=500, stride=16)
+    sess = Session(cache_model=AnalyticalSDCM(backend="batched"))
+    request = PredictionRequest(
+        targets=tuple(t.name for t in TABLE5), core_counts=(1, 2),
+        counts=COUNTS,
+    )
+
+    # predict the signatures this sweep needs from the rows alone
+    rows = []
+    for target in TABLE5:
+        for cores in (1, 2):
+            art = sess.artifacts(trace, cores)
+            shared_idx = shared_level_index(target)
+            for li, lvl in enumerate(target.levels):
+                prof = art.crd if li >= shared_idx else art.prd
+                rows.append(_row_shape_key(
+                    prof, lvl.effective_assoc, lvl.num_lines
+                ))
+    groups: dict[tuple, int] = {}
+    for key in rows:
+        groups[key] = groups.get(key, 0) + 1
+    expected = {
+        ("grid", a_max, _pow2(n), m) for (a_max, m), n in groups.items()
+    }
+    fresh = expected - compiled_signatures()
+
+    before = sess.stats.kernel_compiles
+    sess.predict(trace, request)
+    first_delta = sess.stats.kernel_compiles - before
+    assert first_delta == len(fresh)
+
+    for _ in range(2):
+        warm = sess.stats.kernel_compiles
+        sess.predict(trace, request)
+        assert sess.stats.kernel_compiles == warm, (
+            "a warm repeat sweep must not compile new kernels"
+        )
+
+
+def test_4096_mixed_shape_rows_bit_identical_to_per_row_eval():
+    """Composition invariance at scale: 4096 rows of mixed profile
+    lengths and geometries evaluated in ONE batched call return the
+    same bits as evaluating every cell alone."""
+    rng = np.random.default_rng(42)
+    profiles = [
+        profile_from_distances(np.concatenate([
+            rng.integers(0, 1 << (8 + 2 * k), size=30 * (k + 1)),
+            np.full(3, INF_RD),
+        ]))
+        for k in range(4)
+    ]
+    profiles.append(profile_from_distances(np.array([], dtype=np.int64)))
+    targets = list(TABLE5) + [TPU_V5E]
+
+    items = []
+    levels = 0
+    i = 0
+    while levels < 4096:
+        target = targets[i % len(targets)]
+        items.append((target, _FakeArt(profiles[i % len(profiles)])))
+        levels += len(target.levels)
+        i += 1
+
+    fused = batched_hit_rates(items)
+    assert sum(len(r) for r in fused) >= 4096
+    # spot-check a deterministic sample of cells one at a time; each
+    # solo call must reproduce the fused bits exactly
+    sample = rng.choice(len(items), size=64, replace=False)
+    for ci in sample:
+        (solo,) = batched_hit_rates([items[ci]])
+        assert solo == fused[ci], (
+            f"cell {ci} ({items[ci][0].name}) diverges when evaluated "
+            "alone"
+        )

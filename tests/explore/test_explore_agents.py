@@ -1,0 +1,87 @@
+"""Search agents on a seeded synthetic landscape (no device work)."""
+from __future__ import annotations
+
+import numpy as np
+import pytest
+
+from repro.explore import SearchSpace, make_agent
+from repro.explore.agents import AGENTS, ScoreCache, Trajectory
+
+SPACE = SearchSpace(
+    sets=(256, 1024, 4096, 16384),
+    ways=(2, 4, 8),
+    latency_cy=(20.0, 36.0, 60.0),
+    cores=(1, 2),
+)
+
+
+def landscape(configs):
+    """Deterministic smooth fitness with one global optimum: the
+    4096x8w config at the lowest latency on 2 cores."""
+    out = []
+    for c in configs:
+        out.append(
+            abs(np.log2(c.sets * c.ways) - np.log2(4096 * 8))
+            + 0.01 * c.latency_cy
+            + (0.5 if c.cores == 1 else 0.0)
+        )
+    return np.asarray(out)
+
+
+def best_score():
+    pool = SPACE.configs()
+    return float(np.min(landscape(pool)))
+
+
+@pytest.mark.parametrize("name", sorted(AGENTS))
+def test_agents_recover_known_best_on_seeded_landscape(name):
+    agent = make_agent(name)
+    traj = Trajectory(agent=name, seed=3)
+    cache = ScoreCache(landscape, budget=SPACE.size, trajectory=traj)
+    agent.search(SPACE, cache, np.random.default_rng(3))
+    assert traj.best_score == pytest.approx(best_score())
+    assert traj.best_config is not None
+    assert traj.evaluations <= SPACE.size
+    assert traj.rounds and all("tag" in r for r in traj.rounds)
+
+
+@pytest.mark.parametrize("name", sorted(AGENTS))
+def test_agents_are_deterministic_per_seed(name):
+    def run(seed):
+        traj = Trajectory(agent=name, seed=seed)
+        cache = ScoreCache(landscape, budget=40, trajectory=traj)
+        make_agent(name).search(SPACE, cache, np.random.default_rng(seed))
+        return traj.to_json()
+
+    assert run(7) == run(7)
+
+
+def test_score_cache_budget_and_dedup():
+    calls = []
+
+    def counted(configs):
+        calls.append(len(configs))
+        return landscape(configs)
+
+    pool = SPACE.configs()
+    traj = Trajectory(agent="x", seed=0)
+    cache = ScoreCache(counted, budget=5, trajectory=traj)
+    # duplicates inside one proposal and across rounds never re-evaluate
+    got = cache.score([pool[0], pool[0], pool[1]], tag="a")
+    assert len(got) == 2 and calls == [2]
+    cache.score([pool[0], pool[2]], tag="b")
+    assert calls == [2, 1] and traj.evaluations == 3
+    # the budget truncates, then exhausts
+    cache.score(pool[3:10], tag="c")
+    assert traj.evaluations == 5 and cache.exhausted
+    cache.score(pool[10:12], tag="d")
+    assert traj.evaluations == 5
+    assert [r["evaluated"] for r in traj.rounds] == [2, 1, 2, 0]
+    # top-k is sorted ascending (smaller is better)
+    top = cache.top(3)
+    assert [s for _k, s in top] == sorted(s for _k, s in top)
+
+
+def test_make_agent_rejects_unknown_names():
+    with pytest.raises(ValueError, match="unknown agent"):
+        make_agent("anneal")

@@ -1,0 +1,109 @@
+"""run_explore: result schema, trajectory persistence, warm re-runs."""
+from __future__ import annotations
+
+import numpy as np
+import pytest
+
+from repro.api import Session
+from repro.explore import SearchSpace, explore_key, run_explore
+
+SPACE = SearchSpace(
+    sets=(512, 4096), ways=(4, 8), latency_cy=(20.0, 36.0),
+    cores=(1, 2),
+)
+
+
+def small_trace(iters=400, stride=8):
+    from repro.core.trace.types import trace_from_blocks
+
+    blocks = [("OUT__1__.entry", np.array([0, 8]), True)]
+    A0, B0 = 1 << 20, 2 << 20
+    for i in range(iters):
+        blocks.append((
+            "OUT__1__.for.body",
+            np.array([A0 + stride * i, B0 + stride * (i % 64), 0]),
+            np.array([False, False, True]),
+        ))
+    return trace_from_blocks(blocks)
+
+
+def test_result_schema_and_store_roundtrip(tmp_path):
+    source = small_trace()
+    session = Session(cache_model="batched", artifact_dir=str(tmp_path))
+    res = run_explore(source, SPACE, agent="random", budget=8, seed=1,
+                      session=session, workload="unit/test")
+    assert res["cached"] is False
+    assert res["workload"] == "unit/test"
+    assert res["space"] == SPACE.to_json()
+    assert res["best"]["config"]["size_bytes"] > 0
+    assert res["best"]["score"] == res["trajectory"]["best_score"]
+    assert res["trajectory"]["evaluations"] <= 8
+    assert res["stats"]["fused_dispatches"] >= 1
+    assert len(res["top"]) >= 1
+    scores = [t["score"] for t in res["top"]]
+    assert scores == sorted(scores)
+    assert session.store.get_json("explore", res["key"]) is not None
+
+
+def test_warm_rerun_recomputes_nothing(tmp_path):
+    source = small_trace()
+    kwargs = dict(agent="hillclimb", budget=10, seed=2, workload="unit/test")
+    cold = Session(cache_model="batched", artifact_dir=str(tmp_path))
+    first = run_explore(source, SPACE, session=cold, **kwargs)
+    assert first["cached"] is False
+
+    warm = Session(cache_model="batched", artifact_dir=str(tmp_path))
+    again = run_explore(small_trace(), SPACE, session=warm, **kwargs)
+    assert again["cached"] is True
+    assert again["key"] == first["key"]
+    assert again["best"] == first["best"]
+    assert again["trajectory"] == first["trajectory"]
+    # the whole search came from the store: no profiles, no reuse
+    # distances, no kernel compiles
+    assert warm.stats.profile_builds == 0
+    assert warm.stats.rd_builds == 0
+    assert warm.stats.kernel_compiles == 0
+
+    # a different budget is a different key -> a fresh search
+    other = run_explore(small_trace(), SPACE, session=warm, agent="hillclimb",
+                        budget=11, seed=2, workload="unit/test")
+    assert other["cached"] is False
+
+
+def test_refresh_bypasses_the_store(tmp_path):
+    source = small_trace()
+    session = Session(cache_model="batched", artifact_dir=str(tmp_path))
+    kwargs = dict(agent="random", budget=6, seed=0, workload="unit/test")
+    run_explore(source, SPACE, session=session, **kwargs)
+    res = run_explore(source, SPACE, session=session, refresh=True, **kwargs)
+    assert res["cached"] is False
+
+
+def test_explore_key_is_stable_and_sensitive():
+    base = ("fp", SPACE, "random", {"batch_size": 64}, 16, 0,
+            "llc_miss", "throughput", "vmap")
+    k = explore_key(*base)
+    assert k == explore_key(*base)
+    assert k != explore_key("fp2", *base[1:])
+    assert k != explore_key(*base[:4], 17, *base[5:])
+
+
+def test_storeless_session_still_searches():
+    res = run_explore(small_trace(), SPACE, agent="random", budget=4,
+                      seed=0, session=Session(cache_model="batched"))
+    assert res["cached"] is False
+    assert res["trajectory"]["evaluations"] <= 4
+
+
+def test_agent_params_join_the_key_and_result():
+    res = run_explore(
+        small_trace(), SPACE, agent="ga",
+        agent_params={"population": 6, "elite": 2}, budget=12, seed=4,
+        session=Session(cache_model="batched"),
+    )
+    assert res["agent"] == "ga"
+    assert res["agent_params"]["population"] == 6
+    with pytest.raises(TypeError):
+        run_explore(small_trace(), SPACE, agent="ga",
+                    agent_params={"swarm": 1}, budget=4,
+                    session=Session(cache_model="batched"))

@@ -1,0 +1,100 @@
+"""SearchSpace: enumeration, constraints, serialization, apply()."""
+from __future__ import annotations
+
+import pytest
+
+from repro.api.batched import A_MAX_LIMIT
+from repro.explore import INTERLEAVE_STRATEGIES, CandidateConfig, SearchSpace
+from repro.hw.targets import resolve_target
+
+
+def test_default_space_enumerates_valid_unique_configs():
+    space = SearchSpace()
+    cfgs = space.configs()
+    assert cfgs and len(cfgs) == space.size
+    assert len({c.key() for c in cfgs}) == len(cfgs)
+    for c in cfgs:
+        assert c.ways <= c.sets
+        assert c.size_bytes == c.sets * c.ways * c.line_size
+    # empty latency/beta axes filled from the base target
+    base = resolve_target(space.target)
+    li = space.level_index(base)
+    assert space.latency_cy == (float(base.level_latency_cy[li]),)
+    assert space.beta_cy == (float(base.level_beta_cy[li]),)
+
+
+def test_ways_gt_sets_and_size_bounds_reject_configs():
+    space = SearchSpace(sets=(2, 4096), ways=(4, 8))
+    for c in space.configs():
+        assert c.ways <= c.sets
+    bounded = SearchSpace(
+        sets=(1024, 4096, 16384), ways=(4, 8, 16), line_sizes=(64,),
+        min_size_bytes=1 << 20, max_size_bytes=4 << 20,
+    )
+    for c in bounded.configs():
+        assert 1 << 20 <= c.size_bytes <= 4 << 20
+    assert bounded.size < SearchSpace().size
+
+
+def test_single_core_canonicalizes_strategy_axis():
+    """cores == 1 has nothing to interleave: all strategies alias one
+    config, so the enumeration dedups them."""
+    space = SearchSpace(cores=(1,), strategies=("round_robin", "chunked"))
+    assert {c.strategy for c in space.configs()} == {"round_robin"}
+    multi = SearchSpace(cores=(1, 2), strategies=("round_robin", "chunked"))
+    strategies = {c.strategy for c in multi.configs() if c.cores == 2}
+    assert strategies == {"round_robin", "chunked"}
+
+
+@pytest.mark.parametrize("bad", [
+    {"sets": ()},
+    {"ways": (0,)},
+    {"ways": (A_MAX_LIMIT * 2,)},
+    {"strategies": ("banded",)},
+    {"cores": (10_000,)},
+    {"target": "not-a-target"},
+    {"level": "L9"},
+    {"sets": (4,), "ways": (8,)},           # constraints kill everything
+])
+def test_invalid_spaces_raise(bad):
+    with pytest.raises((ValueError, KeyError)):
+        SearchSpace(**bad)
+
+
+def test_json_roundtrip_and_unknown_keys():
+    space = SearchSpace(sets=(512, 2048), ways=(4, 8), cores=(1, 2),
+                        max_size_bytes=8 << 20)
+    back = SearchSpace.from_json(space.to_json())
+    assert back == space
+    with pytest.raises(ValueError, match="unknown search-space keys"):
+        SearchSpace.from_json({"sets": [512], "cache_sets": [1]})
+    with pytest.raises(ValueError):
+        SearchSpace.from_json([1, 2, 3])
+
+
+def test_apply_substitutes_only_the_swept_level():
+    base = resolve_target("i7-5960X")
+    space = SearchSpace(level="L3")
+    li = space.level_index(base)
+    cfg = CandidateConfig(sets=4096, ways=8, line_size=64,
+                          latency_cy=40.0, beta_cy=2.0,
+                          cores=2, strategy="round_robin")
+    tgt = cfg.apply(base, li)
+    assert tgt.levels[li].size_bytes == cfg.size_bytes
+    assert tgt.levels[li].assoc == cfg.ways
+    assert tgt.level_latency_cy[li] == 40.0
+    assert tgt.level_beta_cy[li] == 2.0
+    for lj, lvl in enumerate(tgt.levels):
+        assert lvl.line_size == 64
+        if lj != li:
+            assert lvl.size_bytes == base.levels[lj].size_bytes
+            assert lvl.assoc == base.levels[lj].assoc
+            assert tgt.level_latency_cy[lj] == base.level_latency_cy[lj]
+    assert tgt.name != base.name
+
+
+def test_strategy_axis_covers_known_interleaves():
+    assert set(INTERLEAVE_STRATEGIES) == {
+        "round_robin", "chunked", "uniform"
+    }
+    SearchSpace(cores=(1, 2), strategies=INTERLEAVE_STRATEGIES)

@@ -29,6 +29,10 @@ Three checks:
    ``SAMPLE_BOUND_DELTA`` and Bernstein closed form must match
    ``repro.core.reuse.sampled`` (the documented formula, recomputed at
    a reference point, must equal ``sampling_error_bound``).
+7. **Explore axes** — the search-space axis table in
+   ``docs/explore.md`` must name exactly the axes of
+   ``repro.explore.SearchSpace.AXES`` (both directions), and the
+   documented agent names must match ``repro.explore.AGENTS``.
 
 Run by the CI ``docs-check`` job and by ``tests/docs/test_docs.py``,
 so documentation drift fails the build instead of accumulating.
@@ -301,6 +305,60 @@ def check_sampling_bound() -> list[str]:
     return problems
 
 
+# docs/explore.md table row whose first column is a backticked name
+NAMED_ROW_RE = re.compile(r"^\|\s*`([a-z_]+)`\s*\|")
+
+
+def _named_table_rows(text: str, heading_substr: str) -> set[str]:
+    """First-column backticked names of table rows under the ``## ``
+    heading containing ``heading_substr`` (case-insensitive)."""
+    rows: set[str] = set()
+    in_section = False
+    for line in text.splitlines():
+        if line.startswith("## "):
+            in_section = heading_substr in line.lower()
+            continue
+        if in_section:
+            m = NAMED_ROW_RE.match(line.strip())
+            if m:
+                rows.add(m.group(1))
+    return rows
+
+
+def check_explore_axes() -> list[str]:
+    """docs/explore.md's axes table and repro.explore.SearchSpace.AXES
+    must agree exactly, both directions (same for the agents table)."""
+    doc = REPO / "docs" / "explore.md"
+    if not doc.is_file():
+        return ["docs/explore.md: missing (the search-space axes must "
+                "be documented)"]
+    try:
+        from repro.explore import AGENTS, SearchSpace
+    except ImportError as exc:
+        return [f"explore.md: cannot import repro.explore ({exc})"]
+    text = doc.read_text()
+    problems = []
+    documented = _named_table_rows(text, "axes")
+    if not documented:
+        return ["explore.md: no axes table found (need a `## ...axes` "
+                "section with one row per SearchSpace axis)"]
+    axes = set(SearchSpace.AXES)
+    for name in sorted(documented - axes):
+        problems.append(f"explore.md: documents axis `{name}` which is "
+                        f"not in SearchSpace.AXES")
+    for name in sorted(axes - documented):
+        problems.append(f"explore.md: SearchSpace axis `{name}` is not "
+                        f"documented in the axes table")
+    documented_agents = _named_table_rows(text, "agents")
+    for name in sorted(documented_agents - set(AGENTS)):
+        problems.append(f"explore.md: documents agent `{name}` which is "
+                        f"not registered in repro.explore.AGENTS")
+    for name in sorted(set(AGENTS) - documented_agents):
+        problems.append(f"explore.md: agent `{name}` is registered but "
+                        f"not documented in the agents table")
+    return problems
+
+
 def run() -> list[str]:
     sys.path.insert(0, str(REPO / "src"))
     sys.path.insert(0, str(REPO))
@@ -312,6 +370,7 @@ def run() -> list[str]:
     problems += check_lint_rules()
     problems += check_runtime_timings()
     problems += check_sampling_bound()
+    problems += check_explore_axes()
     return problems
 
 
